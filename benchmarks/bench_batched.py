@@ -1,0 +1,45 @@
+"""Paper Fig. 12: streaming vs batched graph-update throughput.
+
+Streaming applies the same updates one-at-a-time (scan of §4.2 ops);
+batched uses the §5.2 insert→delete→rebuild pipeline.  Reports updates/s
+for insertion / deletion / mixed workloads.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_state, dataset_stream, record, timeit
+from repro.core.updates import batched_update, stream_updates
+
+SCALE = 10
+BATCH = 512
+
+
+def main():
+    for mode in ("insertion", "deletion", "mixed"):
+        V, stream = dataset_stream(SCALE, batch_size=BATCH, rounds=1,
+                                   mode=mode)
+        st, cfg = build_state(V, stream.init_src, stream.init_dst,
+                              stream.init_w, capacity=512)
+        ins = jnp.asarray(stream.is_insert[0])
+        uu = jnp.asarray(stream.u[0])
+        vv = jnp.asarray(stream.v[0])
+        ww = jnp.asarray(stream.w[0])
+
+        t_b = timeit(jax.jit(
+            lambda s: batched_update(s, cfg, ins, uu, vv, ww)[0]), st)
+        record("batched", f"{mode}-batched", "updates_per_s", BATCH / t_b)
+
+        t_s = timeit(jax.jit(
+            lambda s: stream_updates(s, cfg, ins, uu, vv, ww)[0]), st,
+            reps=1)
+        record("batched", f"{mode}-streaming", "updates_per_s", BATCH / t_s)
+        record("batched", f"{mode}", "batched_speedup", t_s / t_b)
+
+
+if __name__ == "__main__":
+    main()

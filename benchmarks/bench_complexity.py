@@ -1,0 +1,77 @@
+"""Paper Table 1: complexity scaling — sample/insert/delete vs degree.
+
+BINGO must show flat (O(1)/O(K)) curves while alias rebuild / reservoir
+grow linearly and ITS logarithmically.  We measure abstract-op counts
+(exact, from the complexity model) AND wall time on a one-vertex graph of
+controlled degree; wall time on CPU is noisy but the trend is what Table 1
+predicts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import record, timeit
+from repro.core.baselines import (AliasBaseline, ITSBaseline,
+                                  RejectionBaseline, ReservoirBaseline,
+                                  adj_from_edges)
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.sampler import sample_neighbor
+from repro.core.updates import insert_edge
+
+DEGREES = (64, 256, 1024)
+NS = 4096     # samples per measurement
+
+
+def star_graph(d, V=None):
+    V = V or d + 2
+    src = np.zeros(d, np.int32)
+    dst = np.arange(1, d + 1, dtype=np.int32)
+    w = np.random.default_rng(d).integers(1, 4096, d).astype(np.int32)
+    return V, src, dst, w
+
+
+def main():
+    for d in DEGREES:
+        V, src, dst, w = star_graph(d)
+        cfg = BingoConfig(num_vertices=V, capacity=d + 8, bias_bits=12)
+        st = from_edges(cfg, src, dst, w)
+        u = jnp.zeros((NS,), jnp.int32)
+
+        sample = jax.jit(lambda s, k: sample_neighbor(s, cfg, u, k)[0])
+        record("complexity", f"bingo-sample-d{d}", "us_per_op",
+               timeit(sample, st, jax.random.key(0)) / NS * 1e6)
+        ins = jax.jit(lambda s: insert_edge(s, cfg, 0, V - 1, 7)[0])
+        record("complexity", f"bingo-insert-d{d}", "us_per_op",
+               timeit(ins, st) * 1e6)
+
+        adj = adj_from_edges(V, d + 8, src, dst, w.astype(np.float32))
+        for name, cls in (("alias", AliasBaseline), ("its", ITSBaseline),
+                          ("rejection", RejectionBaseline),
+                          ("reservoir", ReservoirBaseline)):
+            eng = cls.build(adj)
+            es = jax.jit(lambda e, k: e.sample(u, k))
+            record("complexity", f"{name}-sample-d{d}", "us_per_op",
+                   timeit(es, eng, jax.random.key(1)) / NS * 1e6)
+            ei = jax.jit(lambda e: e.insert(jnp.int32(0), jnp.int32(V - 1),
+                                            jnp.float32(7.0)))
+            record("complexity", f"{name}-insert-d{d}", "us_per_op",
+                   timeit(ei, eng) * 1e6)
+
+        # abstract op counts (the Table 1 model, exact)
+        dd = jnp.asarray([d])
+        record("complexity", f"model-bingo-insert-d{d}", "ops",
+               float(cfg.num_radix))
+        record("complexity", f"model-alias-update-d{d}", "ops",
+               float(AliasBaseline.update_ops(dd)[0]))
+        record("complexity", f"model-its-sample-d{d}", "ops",
+               float(ITSBaseline.sample_ops(dd)[0]))
+        record("complexity", f"model-reservoir-sample-d{d}", "ops",
+               float(ReservoirBaseline.sample_ops(dd)[0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 11 + 13: adaptive group representation — memory and time.
+
+BS = all-regular groups (full inverted index + full-capacity group rows);
+GA = Eq. 9 adaptive classes.  Reports resident bytes, per-class group
+ratios (Fig. 11(e)), sampling time, and batched-update time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (build_dataset, build_state, record,
+                               state_nbytes, timeit)
+from repro.core.dyngraph import DENSE, EMPTY, ONE, REGULAR, SPARSE
+from repro.core.sampler import sample_neighbor
+from repro.core.updates import batched_update
+
+SCALE = 11
+NS = 4096
+
+
+def main():
+    V, src, dst, w = build_dataset(SCALE)
+    for label, adaptive in (("BS", False), ("GA", True)):
+        st, cfg = build_state(V, src, dst, w, capacity=256,
+                              adaptive=adaptive)
+        record("group_adapt", f"{label}-memory", "bytes", state_nbytes(st))
+
+        u = jnp.asarray(np.random.default_rng(0).integers(0, V, NS),
+                        jnp.int32)
+        fn = jax.jit(lambda s, k: sample_neighbor(s, cfg, u, k)[0])
+        record("group_adapt", f"{label}-sample", "us_per_op",
+               timeit(fn, st, jax.random.key(0)) / NS * 1e6)
+
+        B = 512
+        rng = np.random.default_rng(1)
+        ins = jnp.asarray(rng.random(B) < 0.5)
+        uu = jnp.asarray(rng.integers(0, V, B), jnp.int32)
+        vv = jnp.asarray(rng.integers(0, V, B), jnp.int32)
+        ww = jnp.asarray(rng.integers(1, 4096, B), jnp.int32)
+        upd = jax.jit(
+            lambda s: batched_update(s, cfg, ins, uu, vv, ww)[0])
+        record("group_adapt", f"{label}-update", "us_per_update",
+               timeit(upd, st) / B * 1e6)
+
+        if adaptive:
+            gt = np.asarray(st.gtype)
+            live = gt != EMPTY
+            total = max(int(live.sum()), 1)
+            for code, name in ((DENSE, "dense"), (ONE, "one"),
+                               (SPARSE, "sparse"), (REGULAR, "regular")):
+                record("group_adapt", f"ratio-{name}", "fraction",
+                       float((gt == code).sum() / total))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 16: piecewise insert vs delete vs sample breakdown,
+BINGO vs FlowWalker-style reservoir (reload + O(d) sampling)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_dataset, build_state, record, timeit
+from repro.core.baselines import ReservoirBaseline, adj_from_edges
+from repro.core.sampler import sample_neighbor
+from repro.core.updates import batched_update
+
+SCALE = 11
+N = 4096
+
+
+def main():
+    V, src, dst, w = build_dataset(SCALE)
+    st, cfg = build_state(V, src, dst, w, capacity=256)
+    rng = np.random.default_rng(0)
+    uu = jnp.asarray(rng.integers(0, V, N), jnp.int32)
+    vv = jnp.asarray(rng.integers(0, V, N), jnp.int32)
+    ww = jnp.asarray(rng.integers(1, 4096, N), jnp.int32)
+
+    ins_only = jnp.ones((N,), bool)
+    t = timeit(jax.jit(
+        lambda s: batched_update(s, cfg, ins_only, uu, vv, ww)[0]), st)
+    record("piecewise", "bingo-insert", "us_per_op", t / N * 1e6)
+
+    # delete edges that exist: use the graph's own edges
+    du = jnp.asarray(src[:N], jnp.int32)
+    dv = jnp.asarray(dst[:N], jnp.int32)
+    del_only = jnp.zeros((N,), bool)
+    t = timeit(jax.jit(
+        lambda s: batched_update(s, cfg, del_only, du, dv, ww)[0]), st)
+    record("piecewise", "bingo-delete", "us_per_op", t / N * 1e6)
+
+    us = jnp.asarray(rng.integers(0, V, N), jnp.int32)
+    t = timeit(jax.jit(
+        lambda s, k: sample_neighbor(s, cfg, us, k)[0]), st,
+        jax.random.key(0))
+    record("piecewise", "bingo-sample", "us_per_op", t / N * 1e6)
+
+    # FlowWalker-style: reload (rebuild adj) + reservoir O(d) sampling
+    def reload():
+        return ReservoirBaseline.build(
+            adj_from_edges(V, 256, src, dst, w.astype(np.float32)))
+    t = timeit(lambda: jax.block_until_ready(
+        jax.tree.leaves(reload().adj)[0]), warmup=1, reps=3)
+    record("piecewise", "flowwalker-reload", "us_per_op", t / N * 1e6)
+    eng = reload()
+    t = timeit(jax.jit(lambda e, k: e.sample(us, k)), eng,
+               jax.random.key(1))
+    record("piecewise", "flowwalker-sample", "us_per_op", t / N * 1e6)
+
+
+if __name__ == "__main__":
+    main()

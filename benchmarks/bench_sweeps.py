@@ -1,0 +1,58 @@
+"""Paper Fig. 15: batch size / walk length / bias distribution sweeps."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (build_dataset, build_state, record,
+                               state_nbytes, timeit)
+from repro.core import walks
+from repro.core.updates import batched_update
+from repro.graph.rmat import sample_bias
+
+SCALE = 10
+TOTAL_UPDATES = 2048
+
+
+def main():
+    V, src, dst, w = build_dataset(SCALE)
+    st, cfg = build_state(V, src, dst, w, capacity=256)
+    rng = np.random.default_rng(0)
+
+    # (a) update batch size at fixed total updates
+    for bs in (256, 512, 1024):
+        ins = jnp.ones((bs,), bool)
+        uu = jnp.asarray(rng.integers(0, V, bs), jnp.int32)
+        vv = jnp.asarray(rng.integers(0, V, bs), jnp.int32)
+        ww = jnp.asarray(rng.integers(1, 4096, bs), jnp.int32)
+        upd = jax.jit(lambda s: batched_update(s, cfg, ins, uu, vv, ww)[0])
+        t = timeit(upd, st)
+        record("sweeps", f"batchsize-{bs}", "seconds_total",
+               t * (TOTAL_UPDATES / bs))
+
+    # (b) walk length
+    starts = jnp.arange(0, V, 2, dtype=jnp.int32)
+    for L in (20, 40, 80):
+        fn = jax.jit(lambda s, k: walks.random_walk(
+            s, cfg, starts, k, walks.WalkParams(kind="deepwalk", length=L)))
+        record("sweeps", f"walklen-{L}", "seconds",
+               timeit(fn, st, jax.random.key(L)))
+
+    # (c) bias distribution
+    for dist in ("uniform", "normal", "exponential"):
+        wd = sample_bias(len(src), dist, bias_bits=12, seed=1)
+        std, cfgd = build_state(V, src, dst, wd, capacity=256)
+        record("sweeps", f"dist-{dist}-memory", "bytes", state_nbytes(std))
+        u = jnp.asarray(rng.integers(0, V, 4096), jnp.int32)
+        fn = jax.jit(lambda s, k: __import__(
+            "repro.core.sampler", fromlist=["sample_neighbor"]
+        ).sample_neighbor(s, cfgd, u, k)[0])
+        record("sweeps", f"dist-{dist}-sample", "us_per_op",
+               timeit(fn, std, jax.random.key(0)) / 4096 * 1e6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Shared benchmark machinery: timing, dataset building, CSV output.
+
+Laptop-scale proxies of the paper's workloads (CPU container — §6's
+A100 numbers are not reproducible here; *relative* comparisons between
+our own JAX implementations are the meaningful apples-to-apples, and the
+production-scale story lives in the dry-run/roofline).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.graph.rmat import degree_bias, rmat_edges
+from repro.graph.streams import make_update_stream
+
+ROWS: list[dict] = []
+
+
+def record(bench: str, case: str, metric: str, value: float):
+    ROWS.append({"bench": bench, "case": case, "metric": metric,
+                 "value": value})
+    print(f"{bench},{case},{metric},{value:.6g}", flush=True)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_dataset(scale: int = 11, edge_factor: int = 8, *,
+                  bias_bits: int = 12, seed: int = 0):
+    """RMAT graph + degree biases (paper §6.1 'bias from vertex degree')."""
+    src, dst, = rmat_edges(scale, edge_factor, seed=seed)
+    V = 1 << scale
+    w = degree_bias(src, dst, V, bias_bits=bias_bits)
+    return V, src, dst, w
+
+
+def build_state(V, src, dst, w, *, capacity: int = 256,
+                bias_bits: int = 12, adaptive: bool = True,
+                fp_bias: bool = False):
+    cfg = BingoConfig(num_vertices=V, capacity=capacity,
+                      bias_bits=bias_bits, adaptive=adaptive,
+                      fp_bias=fp_bias)
+    st = from_edges(cfg, src, dst, w)
+    return st, cfg
+
+
+def state_nbytes(state) -> int:
+    """Resident bytes of the BINGO sampling space (memory metric)."""
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(state)))
+
+
+def dataset_stream(scale=11, *, batch_size=512, rounds=4, mode="mixed",
+                   bias_bits=12, seed=0):
+    V, src, dst, w = build_dataset(scale, bias_bits=bias_bits, seed=seed)
+    stream = make_update_stream(src, dst, w, batch_size=batch_size,
+                                rounds=rounds, mode=mode, seed=seed)
+    return V, stream

@@ -1,0 +1,63 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+``python -m benchmarks.run [--only table3,...]`` prints CSV rows
+``bench,case,metric,value`` (captured into bench_output.txt for the
+final deliverable) and writes experiments/bench_results.csv.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import time
+import traceback
+
+from benchmarks import (bench_batched, bench_complexity, bench_fp_bias,
+                        bench_group_adapt, bench_piecewise, bench_sweeps,
+                        bench_table3)
+from benchmarks.common import ROWS
+
+MODULES = {
+    "table3": bench_table3,          # paper Table 3
+    "complexity": bench_complexity,  # paper Table 1
+    "group_adapt": bench_group_adapt,  # paper Fig. 11 + 13
+    "batched": bench_batched,        # paper Fig. 12
+    "fp_bias": bench_fp_bias,        # paper Fig. 14
+    "sweeps": bench_sweeps,          # paper Fig. 15
+    "piecewise": bench_piecewise,    # paper Fig. 16
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    print("bench,case,metric,value")
+    failed = []
+    for name, mod in MODULES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "bench_results.csv"), "w", newline="") as f:
+        wr = csv.DictWriter(f, fieldnames=["bench", "case", "metric",
+                                           "value"])
+        wr.writeheader()
+        wr.writerows(ROWS)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,98 @@
+"""Vectorized alias tables (Walker/Vose) — the paper's stage-(i) structure.
+
+BINGO keeps one *inter-group* alias table per vertex over its K radix groups
+(+1 decimal group in fp mode).  K <= 33, so a table row fits in a vector
+register; construction is a K-step masked small/large pairing, vmapped over
+vertices.  The same code builds the O(d)-entry tables of the KnightKing-style
+alias *baseline* (core/baselines.py).
+
+All functions are pure and shape-static.  ``build_alias`` runs ``n``
+sequential steps of row-parallel work: on TPU each step is one VPU pass over
+the row, so the wall-clock matches the textbook O(n) construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AliasTable", "build_alias", "sample_alias", "alias_probs"]
+
+
+class AliasTable(NamedTuple):
+    prob: jax.Array   # (..., n) float32 — acceptance threshold per bucket
+    alias: jax.Array  # (..., n) int32   — redirect target per bucket
+
+
+def _build_row(w: jax.Array) -> AliasTable:
+    """Vose's algorithm on one weight row ``w`` (n,) -> alias table row."""
+    n = w.shape[-1]
+    total = jnp.sum(w)
+    scaled = jnp.where(total > 0, w * n / jnp.maximum(total, 1e-30), 0.0)
+    prob0 = jnp.ones((n,), jnp.float32)
+    alias0 = jnp.arange(n, dtype=jnp.int32)
+    done0 = jnp.zeros((n,), bool)
+
+    def body(_, carry):
+        scaled, prob, alias, done = carry
+        small = (~done) & (scaled < 1.0)
+        large = (~done) & (scaled >= 1.0)
+        do = jnp.any(small) & jnp.any(large)
+        s = jnp.argmax(small)
+        l = jnp.argmax(large)
+        # retire small s against large l
+        prob = jnp.where(do, prob.at[s].set(scaled[s]), prob)
+        alias = jnp.where(do, alias.at[s].set(l), alias)
+        scaled = jnp.where(do, scaled.at[l].add(scaled[s] - 1.0), scaled)
+        done = jnp.where(do, done.at[s].set(True), done)
+        return scaled, prob, alias, done
+
+    scaled, prob, alias, done = jax.lax.fori_loop(
+        0, n, body, (scaled, prob0, alias0, done0)
+    )
+    # Entries never retired as "small" (the final larges / near-1 smalls)
+    # keep prob=1, alias=self — the textbook termination.  Zero-total rows
+    # (empty vertices) degrade to prob=1 uniform; callers must not sample
+    # from degree-0 vertices (walks.py masks them).
+    return AliasTable(prob, alias)
+
+
+def build_alias(w: jax.Array) -> AliasTable:
+    """Build alias tables for a batch of weight rows ``(..., n)``."""
+    w = jnp.asarray(w, jnp.float32)
+    flat = w.reshape((-1, w.shape[-1]))
+    t = jax.vmap(_build_row)(flat)
+    return AliasTable(
+        t.prob.reshape(w.shape), t.alias.reshape(w.shape)
+    )
+
+
+def sample_alias(table: AliasTable, u0: jax.Array, u1: jax.Array) -> jax.Array:
+    """O(1) alias sampling with two uniforms in [0, 1).
+
+    ``table`` rows broadcast against the leading dims of ``u0``/``u1``.
+    """
+    n = table.prob.shape[-1]
+    i = jnp.minimum((u0 * n).astype(jnp.int32), n - 1)
+    p = jnp.take_along_axis(table.prob, i[..., None], axis=-1)[..., 0]
+    a = jnp.take_along_axis(table.alias, i[..., None], axis=-1)[..., 0]
+    return jnp.where(u1 < p, i, a)
+
+
+def alias_probs(table: AliasTable) -> jax.Array:
+    """Exact per-entry selection probabilities encoded by ``table``.
+
+    Used by tests to assert the table reproduces ``w / sum(w)`` exactly:
+    P(j) = (prob[j] + sum_i (1 - prob[i]) [alias[i] == j]) / n.
+    """
+    n = table.prob.shape[-1]
+    overflow = 1.0 - table.prob  # mass redirected from bucket i to alias[i]
+    redirected = jax.vmap(
+        lambda a, o: jnp.zeros((n,), jnp.float32).at[a].add(o),
+        in_axes=(0, 0),
+    )(
+        table.alias.reshape((-1, n)), overflow.reshape((-1, n))
+    ).reshape(table.prob.shape)
+    return (table.prob + redirected) / n

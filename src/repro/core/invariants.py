@@ -1,0 +1,101 @@
+"""Structural invariants of the BINGO sampling space (test oracle).
+
+Checked with numpy for clarity; hypothesis property tests drive random
+update sequences through `updates.py` and assert these after every step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dyngraph import DENSE, EMPTY, ONE, REGULAR, SPARSE, BingoConfig
+
+
+def check_state(state, cfg: BingoConfig, vertices=None) -> None:
+    """Raise AssertionError on any violated invariant."""
+    nbr = np.asarray(state.nbr)
+    bias = np.asarray(state.bias)
+    frac = np.asarray(state.frac)
+    deg = np.asarray(state.deg)
+    gmem = np.asarray(state.gmem)
+    ginv = None if state.ginv is None else np.asarray(state.ginv)
+    gsize = np.asarray(state.gsize)
+    digitsum = np.asarray(state.digitsum)
+    wdec = np.asarray(state.wdec)
+    gtype = np.asarray(state.gtype)
+
+    V, C = nbr.shape
+    K, Cg = cfg.num_radix, cfg.group_capacity
+    B = cfg.base
+    r = cfg.base_log2
+    verts = range(V) if vertices is None else vertices
+
+    for u in verts:
+        d = int(deg[u])
+        assert 0 <= d <= C, f"deg out of range at {u}"
+        assert (nbr[u, :d] >= 0).all(), f"invalid neighbor in live slots of {u}"
+        assert (nbr[u, d:] == -1).all(), f"stale neighbor past deg of {u}"
+        if not cfg.fp_bias:
+            assert (bias[u, :d] >= 1).all(), f"zero bias in live slot of {u}"
+        else:
+            assert (bias[u, :d] + frac[u, :d] > 0).all(), f"empty fp bias at {u}"
+        # counters match the adjacency row exactly
+        digs = (bias[u, :d, None] >> (r * np.arange(K))) & (B - 1)  # (d, K)
+        assert (digitsum[u] == digs.sum(0)).all(), f"digitsum mismatch at {u}"
+        assert (gsize[u] == (digs != 0).sum(0)).all(), f"gsize mismatch at {u}"
+        np.testing.assert_allclose(
+            wdec[u], frac[u, :d].sum(), atol=1e-4,
+            err_msg=f"wdec mismatch at {u}")
+
+        for k in range(K):
+            sz = int(gsize[u, k])
+            expected = set(np.nonzero(digs[:, k] != 0)[0].tolist())
+            t = int(gtype[u, k])
+            if sz == 0:
+                assert t == EMPTY, f"type of empty group ({u},{k})"
+                continue
+            if cfg.adaptive:
+                if sz > cfg.alpha * d:
+                    assert t == DENSE, f"dense misclass ({u},{k})"
+                elif sz == 1:
+                    assert t == ONE, f"one misclass ({u},{k})"
+                elif sz < cfg.beta * d:
+                    assert t == SPARSE, f"sparse misclass ({u},{k})"
+                else:
+                    assert t == REGULAR, f"regular misclass ({u},{k})"
+            else:
+                assert t == REGULAR, f"baseline type ({u},{k})"
+            if t == DENSE:
+                continue  # unmaterialized — nothing else to check
+            # materialized: gmem prefix lists exactly the member slots
+            got = gmem[u, k, :sz]
+            assert (got >= 0).all(), f"hole in group row ({u},{k})"
+            assert len(set(got.tolist())) == sz, f"dup in group row ({u},{k})"
+            assert set(got.tolist()) == expected, \
+                f"membership mismatch ({u},{k}): {sorted(got)} vs {sorted(expected)}"
+            assert (gmem[u, k, sz:] == -1).all(), f"stale tail ({u},{k})"
+            if ginv is not None:
+                for p_, s_ in enumerate(got):
+                    assert ginv[u, k, s_] == p_, \
+                        f"inverted index broken ({u},{k},{s_})"
+                dead = np.setdiff1d(np.arange(C), got)
+                assert (ginv[u, k, dead] == -1).all(), \
+                    f"stale inverted entries ({u},{k})"
+
+        # inter-group alias row encodes the exact group weights (Thm 4.1
+        # stage-(i) marginal)
+        wts = digitsum[u].astype(np.float64) * (float(B) ** np.arange(K))
+        if cfg.fp_bias:
+            wts = np.append(wts, wdec[u])
+        prob = np.asarray(state.itable.prob[u], np.float64)
+        al = np.asarray(state.itable.alias[u])
+        n = len(prob)
+        enc = prob.copy()
+        for i in range(n):
+            enc[al[i]] += 1.0 - prob[i]
+        enc /= n
+        tot = wts.sum()
+        if tot > 0:
+            np.testing.assert_allclose(
+                enc, wts / tot, atol=2e-4,
+                err_msg=f"alias row does not encode group weights at {u}")

@@ -1,0 +1,150 @@
+"""Hierarchical (inter-group -> intra-group) sampling — paper §4.1/§4.3/§5.1.
+
+Stage (i):  O(1) alias pick over the K radix groups (+ decimal group).
+Stage (ii): O(1) pick inside the chosen group:
+  * materialized groups (ONE/SPARSE/REGULAR): uniform slot pick from ``gmem``
+    (base 2: every member carries the same sub-bias 2^k — paper Eq. 6);
+    for radix bases > 2 a digit-proportional acceptance step follows (§9.2);
+  * DENSE groups: rejection on the raw adjacency row — accept iff the
+    candidate's digit at position k is set (paper §5.1; acceptance > alpha);
+  * decimal group (fp mode): ITS over the frac row (§4.3 — mass < 1/d by
+    construction, so the O(C)-lane pass is off the hot path).
+
+Everything is batch-level (B,) code — one fused program per walker step, no
+per-walker Python.  The Pallas kernel ``kernels/walk_sample.py`` mirrors the
+base-2 fast path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import radix
+from repro.core.alias import sample_alias
+from repro.core.dyngraph import DENSE, BingoConfig, BingoState
+
+__all__ = ["sample_group", "sample_slot", "sample_neighbor", "transition_probs"]
+
+_MAX_TRIALS = 64  # rejection bound before the exact ITS fallback kicks in
+
+
+def sample_group(state: BingoState, cfg: BingoConfig, u, key):
+    """Stage (i): pick a radix group per walker via the inter-group alias."""
+    u0, u1 = jax.random.uniform(key, (2,) + u.shape)
+    rows = jax.tree.map(lambda t: t[u], state.itable)
+    return sample_alias(rows, u0, u1)
+
+
+def _its_rows(w, x01):
+    """Inverse-transform sampling over weight rows ``w`` (B, C)."""
+    c = jnp.cumsum(w, axis=-1)
+    total = c[:, -1:]
+    x = x01[:, None] * total
+    idx = jnp.sum(c <= x, axis=-1)  # first i with c[i] > x
+    return jnp.minimum(idx, w.shape[-1] - 1).astype(jnp.int32)
+
+
+def sample_slot(state: BingoState, cfg: BingoConfig, u, k, key):
+    """Stage (ii): pick an adjacency slot inside group ``k`` per walker."""
+    K = cfg.num_radix
+    B = u.shape[0]
+    kc = jnp.minimum(k, K - 1)
+    is_dec = (k == K) if cfg.fp_bias else jnp.zeros((B,), bool)
+    gt = state.gtype[u, kc]
+    dense = (gt == DENSE) & ~is_dec
+    mat = ~dense & ~is_dec
+
+    key, k_pos = jax.random.split(key)
+    u_pos = jax.random.uniform(k_pos, (B,))
+    gsz = jnp.maximum(state.gsize[u, kc], 1)
+    pos = jnp.minimum((u_pos * gsz).astype(jnp.int32), gsz - 1)
+    slot = jnp.where(mat, state.gmem[u, kc, jnp.minimum(pos, cfg.group_capacity - 1)], -1)
+
+    needs_loop = cfg.adaptive or cfg.base_log2 > 1
+    if needs_loop:
+        # Base-2 materialized picks are already exact; only DENSE rejection
+        # (and, for base > 2, digit acceptance) iterate.
+        if cfg.base_log2 > 1:
+            ok0 = is_dec  # everyone else must pass digit acceptance
+        else:
+            ok0 = ~dense
+        bmax = jnp.float32(cfg.base - 1)
+
+        def cond(c):
+            key, slot, ok, t = c
+            return jnp.any(~ok) & (t < _MAX_TRIALS)
+
+        def body(c):
+            key, slot, ok, t = c
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            uj = jax.random.uniform(k1, (B,))
+            up = jax.random.uniform(k2, (B,))
+            ua = jax.random.uniform(k3, (B,))
+            dg = jnp.maximum(state.deg[u], 1)
+            j_dense = jnp.minimum((uj * dg).astype(jnp.int32), dg - 1)
+            p2 = jnp.minimum((up * gsz).astype(jnp.int32), gsz - 1)
+            j_mat = state.gmem[u, kc, jnp.minimum(p2, cfg.group_capacity - 1)]
+            cand = jnp.where(dense, j_dense, j_mat)
+            dig = radix.digit_at(state.bias[u, jnp.maximum(cand, 0)], kc,
+                                 cfg.base_log2)
+            accept = (ua * bmax < dig.astype(jnp.float32)) & (cand >= 0)
+            slot = jnp.where(~ok & accept, cand, slot)
+            ok = ok | accept
+            return key, slot, ok, t + 1
+
+        key, loop_key = jax.random.split(key)
+        _, slot, ok, _ = jax.lax.while_loop(
+            cond, body, (loop_key, slot, ok0, jnp.int32(0)))
+    else:
+        ok = mat
+
+    # Exact fallbacks sharing one masked ITS pass:
+    #   decimal-group walkers sample ∝ frac; rejection-timeout walkers sample
+    #   ∝ digit_k (the exact conditional of Eq. 6) — distribution unchanged.
+    need_its = is_dec | ~ok
+    if cfg.fp_bias or needs_loop:
+        def its_path(key):
+            valid = (jnp.arange(cfg.capacity, dtype=jnp.int32)[None, :]
+                     < state.deg[u][:, None])
+            dig_row = radix.digits(state.bias[u], K, cfg.base_log2)  # (B,C,K)
+            w_dig = jnp.take_along_axis(
+                dig_row, kc[:, None, None], axis=-1)[..., 0].astype(jnp.float32)
+            w = jnp.where(is_dec[:, None], state.frac[u], w_dig)
+            w = jnp.where(valid, w, 0.0)
+            x01 = jax.random.uniform(key, (B,))
+            return _its_rows(w, x01)
+
+        key, its_key = jax.random.split(key)
+        slot_its = jax.lax.cond(
+            jnp.any(need_its), its_path,
+            lambda _: jnp.zeros((B,), jnp.int32), its_key)
+        slot = jnp.where(need_its, slot_its, slot)
+    return slot
+
+
+def sample_neighbor(state: BingoState, cfg: BingoConfig, u, key
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One full BINGO sample per walker: returns ``(next_vertex, slot)``.
+
+    Callers must mask walkers sitting on degree-0 vertices.
+    """
+    kg, ks = jax.random.split(key)
+    k = sample_group(state, cfg, u, kg)
+    slot = sample_slot(state, cfg, u, k, ks)
+    return state.nbr[u, jnp.maximum(slot, 0)], slot
+
+
+def transition_probs(state: BingoState, cfg: BingoConfig, u):
+    """Exact per-slot transition probabilities (paper Eq. 2 ground truth).
+
+    Theorem 4.1: the factorized sampler must reproduce w_i / Σ w_i exactly;
+    tests compare empirical walk histograms against this.
+    """
+    valid = (jnp.arange(cfg.capacity, dtype=jnp.int32)[None, :]
+             < state.deg[u][:, None])
+    w = state.bias[u].astype(jnp.float32) + state.frac[u]
+    w = jnp.where(valid, w, 0.0)
+    return w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)

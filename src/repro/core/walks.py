@@ -1,0 +1,165 @@
+"""Random-walk applications on top of the BINGO sampler (paper §2.2/§6).
+
+The paper's four application kernels map to one scanned walker step with
+per-application policies:
+
+  * ``deepwalk``  — first-order biased walk, fixed length (default 80);
+  * ``node2vec``  — second-order walk; we adopt the paper's own choice
+    (§7.3): KnightKing-style static proposal from BINGO + rejection with
+    the history factor f(w, v) of Eq. 1, with an *exact* second-order ITS
+    fallback after a bounded number of trials (distribution unchanged);
+  * ``ppr``       — geometric termination with probability 1/80 per step;
+  * ``simple``    — unbiased neighbor pick (sanity/reference).
+
+Walkers that terminate (or sit on degree-0 vertices) emit -1 and hold.
+All functions are jittable; ``state``/``cfg`` are closed over per-engine.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, BingoState
+from repro.core.sampler import _its_rows, sample_neighbor
+
+__all__ = ["WalkParams", "random_walk", "deepwalk", "node2vec", "ppr"]
+
+_N2V_TRIALS = 16
+
+
+class WalkParams(NamedTuple):
+    kind: str = "deepwalk"     # deepwalk | node2vec | ppr | simple
+    length: int = 80
+    p: float = 0.5             # node2vec return parameter
+    q: float = 2.0             # node2vec in-out parameter
+    stop_prob: float = 0.0     # ppr termination probability per step
+
+
+def _is_neighbor(state: BingoState, cfg: BingoConfig, src, cand):
+    """Vectorized membership test cand ∈ N(src) — one masked row compare.
+
+    (On GPU the paper inherits KnightKing's per-thread binary search; on TPU
+    the padded row compare is a single VPU pass — DESIGN.md §2.)
+    """
+    row = state.nbr[src]                                   # (B, C)
+    valid = (jnp.arange(cfg.capacity, dtype=jnp.int32)[None, :]
+             < state.deg[src][:, None])
+    return jnp.any((row == cand[:, None]) & valid, axis=-1)
+
+
+def _n2v_factor(state, cfg, prev, cand, p, q):
+    dist0 = cand == prev
+    dist1 = _is_neighbor(state, cfg, prev, cand)
+    return jnp.where(dist0, 1.0 / p, jnp.where(dist1, 1.0, 1.0 / q))
+
+
+def _n2v_accept(state, cfg, prev, cur, has_prev, key, params):
+    """Second-order step: BINGO proposal + history-factor rejection."""
+    B = cur.shape[0]
+    fmax = max(1.0 / params.p, 1.0, 1.0 / params.q)
+
+    def cond(c):
+        key, nxt, ok, t = c
+        return jnp.any(~ok) & (t < _N2V_TRIALS)
+
+    def body(c):
+        key, nxt, ok, t = c
+        key, k1, k2 = jax.random.split(key, 3)
+        cand, _ = sample_neighbor(state, cfg, cur, k1)
+        f = _n2v_factor(state, cfg, prev, cand, params.p, params.q)
+        f = jnp.where(has_prev, f, 1.0)  # first hop is first-order
+        accept = jax.random.uniform(k2, (B,)) * fmax < f
+        nxt = jnp.where(~ok & accept, cand, nxt)
+        return key, nxt, ok | accept, t + 1
+
+    key, loop_key, fb_key = jax.random.split(key, 3)
+    _, nxt, ok, _ = jax.lax.while_loop(
+        cond, body, (loop_key, jnp.zeros((B,), jnp.int32),
+                     jnp.zeros((B,), bool), jnp.int32(0)))
+
+    def exact_fallback(key):
+        # Exact second-order ITS over the full row: w_j * f(prev, v_j).
+        valid = (jnp.arange(cfg.capacity, dtype=jnp.int32)[None, :]
+                 < state.deg[cur][:, None])
+        w = state.bias[cur].astype(jnp.float32) + state.frac[cur]
+        nbrs = state.nbr[cur]                               # (B, C)
+        d0 = nbrs == prev[:, None]
+        d1 = jax.vmap(lambda pv, cd: _is_neighbor(state, cfg,
+                                                  jnp.broadcast_to(pv, cd.shape), cd)
+                      )(prev, nbrs)
+        f = jnp.where(d0, 1.0 / params.p, jnp.where(d1, 1.0, 1.0 / params.q))
+        f = jnp.where(has_prev[:, None], f, 1.0)
+        w = jnp.where(valid, w * f, 0.0)
+        slot = _its_rows(w, jax.random.uniform(key, (B,)))
+        return jnp.take_along_axis(nbrs, slot[:, None], axis=-1)[:, 0]
+
+    nxt_fb = jax.lax.cond(jnp.any(~ok), exact_fallback,
+                          lambda _: jnp.zeros((B,), jnp.int32), fb_key)
+    return jnp.where(ok, nxt, nxt_fb)
+
+
+def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
+                params: WalkParams):
+    """Run a batch of walks; returns ``(B, length + 1)`` int32 paths.
+
+    Column 0 holds the start vertices; terminated walkers pad with -1.
+    """
+    B = starts.shape[0]
+    alive0 = state.deg[starts] > 0
+
+    def step(carry, key):
+        cur, prev, has_prev, alive = carry
+        k1, k2 = jax.random.split(key)
+        safe = jnp.maximum(cur, 0)
+        if params.kind == "node2vec":
+            nxt = _n2v_accept(state, cfg, prev, safe, has_prev, k1, params)
+        elif params.kind == "simple":
+            dg = jnp.maximum(state.deg[safe], 1)
+            j = jnp.minimum(
+                (jax.random.uniform(k1, (B,)) * dg).astype(jnp.int32), dg - 1)
+            nxt = state.nbr[safe, j]
+        else:
+            nxt, _ = sample_neighbor(state, cfg, safe, k1)
+        if params.kind == "ppr" and params.stop_prob > 0:
+            alive = alive & (jax.random.uniform(k2, (B,)) >= params.stop_prob)
+        alive = alive & (state.deg[safe] > 0)
+        out = jnp.where(alive, nxt, -1)
+        nxt_alive = alive & (nxt >= 0) & (state.deg[jnp.maximum(nxt, 0)] > 0)
+        return (jnp.where(alive, nxt, cur), jnp.where(alive, safe, prev),
+                has_prev | alive, nxt_alive), out
+
+    keys = jax.random.split(key, params.length)
+    (_, _, _, _), path = jax.lax.scan(
+        step, (starts, starts, jnp.zeros((B,), bool), alive0), keys)
+    return jnp.concatenate(
+        [starts[:, None], jnp.swapaxes(path, 0, 1)], axis=1)
+
+
+def deepwalk(state, cfg, starts, key, length: int = 80):
+    return random_walk(state, cfg, starts, key,
+                       WalkParams(kind="deepwalk", length=length))
+
+
+def node2vec(state, cfg, starts, key, length: int = 80,
+             p: float = 0.5, q: float = 2.0):
+    return random_walk(state, cfg, starts, key,
+                       WalkParams(kind="node2vec", length=length, p=p, q=q))
+
+
+def ppr(state, cfg, starts, key, max_length: int = 400,
+        stop_prob: float = 1.0 / 80.0):
+    return random_walk(state, cfg, starts, key,
+                       WalkParams(kind="ppr", length=max_length,
+                                  stop_prob=stop_prob))
+
+
+def make_walker(state: BingoState, cfg: BingoConfig, params: WalkParams):
+    """Jitted walk closure (cfg/params static) for benchmarks/pipeline."""
+    @functools.partial(jax.jit, static_argnums=())
+    def run(st, starts, key):
+        return random_walk(st, cfg, starts, key, params)
+    return run

@@ -1,0 +1,5 @@
+"""Data pipeline: BINGO walks -> packed LM token batches."""
+
+from repro.data.pipeline import WalkCorpusPipeline, pack_walks
+
+__all__ = ["WalkCorpusPipeline", "pack_walks"]

@@ -1,0 +1,106 @@
+"""BINGO walks → packed LM token batches (the paper's use case #1).
+
+Random walks are how graph structure becomes *sequences* — DeepWalk-style
+corpora for representation learning (the paper's §1 motivation: walks are
+96.2% of end-to-end GNN training time).  The pipeline:
+
+  walker fan-out:  each producer round samples a walk batch from the
+                   (dynamically updating) BingoState — on a real cluster
+                   one producer per vertex shard;
+  packing:         walks concatenate with a separator into fixed (B, S+1)
+                   token rows (vertex-id vocabulary), -1 marking pad;
+  straggler hook:  ``overprovision`` producers are launched per round and
+                   the first ``1/overprovision`` fraction satisfies the
+                   batch (backup-task mitigation — DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walks as W
+from repro.core.dyngraph import BingoConfig, BingoState
+
+__all__ = ["pack_walks", "WalkCorpusPipeline"]
+
+
+def pack_walks(paths: np.ndarray, seq_len: int, sep: int,
+               pad: int = -1) -> np.ndarray:
+    """Concatenate walk rows (with separators) into (N, seq_len + 1) rows.
+
+    ``paths`` is (W, L+1) with -1 padding from terminated walkers.  The
+    +1 column lets the trainer slice inputs/targets with one shift.
+    """
+    toks: list[int] = []
+    for row in paths:
+        live = row[row >= 0]
+        if len(live) < 2:
+            continue
+        toks.extend(int(t) for t in live)
+        toks.append(sep)
+    n = len(toks) // (seq_len + 1)
+    if n == 0:
+        return np.full((0, seq_len + 1), pad, np.int32)
+    return np.asarray(toks[: n * (seq_len + 1)], np.int32).reshape(
+        n, seq_len + 1)
+
+
+class WalkCorpusPipeline:
+    """Iterator of LM batches produced by live BINGO random walks."""
+
+    def __init__(self, state: BingoState, cfg: BingoConfig, *,
+                 params: Optional[W.WalkParams] = None,
+                 walkers_per_round: int = 256, seq_len: int = 128,
+                 batch_size: int = 8, seed: int = 0,
+                 overprovision: int = 1):
+        self.state = state
+        self.cfg = cfg
+        self.params = params or W.WalkParams(kind="deepwalk", length=16)
+        self.Wr = walkers_per_round
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.sep = cfg.num_vertices          # one-past-max vertex id
+        self.vocab = cfg.num_vertices + 1
+        self.key = jax.random.key(seed)
+        self.overprovision = max(1, overprovision)
+        self._buf = np.zeros((0, seq_len + 1), np.int32)
+        self._walk = jax.jit(
+            lambda st, starts, key: W.random_walk(st, cfg, starts, key,
+                                                  self.params))
+
+    def update_graph(self, state: BingoState):
+        """Swap in a new snapshot (called after dynamic updates land)."""
+        self.state = state
+
+    def _produce_round(self):
+        """One fan-out round: overprovisioned producers, first-k kept."""
+        rounds = []
+        for _ in range(self.overprovision):
+            self.key, k1, k2 = jax.random.split(self.key, 3)
+            starts = jax.random.randint(
+                k1, (self.Wr,), 0, self.cfg.num_vertices).astype(jnp.int32)
+            rounds.append(self._walk(self.state, starts, k2))
+        # straggler policy: on-cluster, block on the first 1/overprovision
+        # producers to finish; single-process keeps producer 0.
+        paths = np.asarray(rounds[0])
+        packed = pack_walks(paths, self.seq_len, self.sep)
+        if len(packed):
+            self._buf = np.concatenate([self._buf, packed])
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        while len(self._buf) < self.batch_size:
+            self._produce_round()
+        rows = self._buf[: self.batch_size]
+        self._buf = self._buf[self.batch_size:]
+        return {
+            "inputs": jnp.asarray(rows[:, :-1]),
+            "targets": jnp.asarray(rows[:, 1:]),
+        }

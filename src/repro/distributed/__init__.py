@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding rules, collectives, compression."""
+
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        fsdp_axes, param_pspecs)
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "fsdp_axes"]

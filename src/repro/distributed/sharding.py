@@ -1,0 +1,153 @@
+"""Logical sharding rules for every architecture on the production mesh.
+
+Mesh axes: ``data`` (16) × ``model`` (16), plus ``pod`` (2) multi-pod.
+Policy (DESIGN.md §5):
+
+  * FSDP  — every weight matrix shards its *input-features* dim over
+    ``data`` (× ``pod``); XLA all-gathers per scanned stage and overlaps
+    with compute.
+  * TP    — output-features (heads / d_ff / vocab) shard over ``model``.
+  * EP    — expert dim shards over ``model`` when ``E % 16 == 0``
+    (llama4, jamba); otherwise experts keep d_ff-TP (mixtral's 8 experts).
+  * Every rule is divisibility-checked with a replicate fallback, so
+    odd dims (yi-34b's 56 heads, hubert's 504 vocab) degrade gracefully
+    instead of failing to lower.
+
+Batch shards over (pod, data); long-context decode shards the KV cache
+sequence over ``model`` when heads cannot be sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["fsdp_axes", "param_pspecs", "batch_pspec", "cache_pspecs",
+           "axis_size"]
+
+
+def fsdp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh, axes, dim: int):
+    """axes if ``dim`` divides their product, else None (replicate)."""
+    if axes is None:
+        return None
+    if dim % axis_size(mesh, axes) == 0:
+        return axes if isinstance(axes, str) else axes
+    return None
+
+
+def _matrix_spec(mesh, shape, *, lead_none: int, in_axes, out_axes):
+    """P(in_axes on dim -2, out_axes on dim -1) with divisibility checks."""
+    spec = [None] * lead_none
+    spec.append(_maybe(mesh, in_axes, shape[-2]))
+    spec.append(_maybe(mesh, out_axes, shape[-1]))
+    return P(*spec)
+
+
+def param_pspecs(params, cfg, mesh) -> Any:
+    """PartitionSpec pytree matching ``init_model(cfg, ...)``'s structure."""
+    fsdp = fsdp_axes(mesh)
+    ep_ok = cfg.num_experts and cfg.num_experts % axis_size(mesh, "model") == 0
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        stacked = "stages" in names           # leading R axis
+        lead = 1 if stacked else 0
+        nd = leaf.ndim
+        # --- embeddings / head ---------------------------------------------
+        if name == "embed":
+            return P(_maybe(mesh, "model", leaf.shape[0]),
+                     _maybe(mesh, fsdp, leaf.shape[1]))
+        if name == "head":
+            return P(_maybe(mesh, fsdp, leaf.shape[0]),
+                     _maybe(mesh, "model", leaf.shape[1]))
+        if name == "frontend_proj":
+            return P(_maybe(mesh, fsdp, leaf.shape[0]), None)
+        # --- MoE -------------------------------------------------------------
+        if "moe" in names:
+            if name == "router":
+                return P(*([None] * lead),
+                         _maybe(mesh, fsdp, leaf.shape[lead]), None)
+            if nd == lead + 3:                # (R, E, D, F) expert weights
+                if ep_ok:
+                    return P(*([None] * lead), "model",
+                             _maybe(mesh, fsdp, leaf.shape[lead + 1]), None)
+                return _matrix_spec(
+                    mesh, leaf.shape, lead_none=lead + 1,
+                    in_axes=fsdp if name != "wo" else "model",
+                    out_axes="model" if name != "wo" else fsdp)
+        # --- generic 2-D weights ------------------------------------------
+        if nd == lead + 2:
+            out_proj = name in ("wo", "w_down", "out_proj", "dt_proj")
+            return _matrix_spec(
+                mesh, leaf.shape, lead_none=lead,
+                in_axes="model" if out_proj else fsdp,
+                out_axes=fsdp if out_proj else "model")
+        if nd == lead + 3 and name == "r_h":  # sLSTM block-diag recurrence
+            return P(*([None] * lead), None, None, None)
+        # --- vectors (norms, biases, gates) --------------------------------
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_pspec(cfg, mesh, batch_example) -> Any:
+    """Input-batch specs: batch dim over (pod, data) when divisible."""
+    dp = fsdp_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        ax = _maybe(mesh, dp, b)
+        if ax is None and b % mesh.shape[dp[-1]] == 0:
+            ax = dp[-1]                       # data only (e.g. batch 16)
+        return P(ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_example)
+
+
+def cache_pspecs(cfg, mesh, cache_example) -> Any:
+    """Decode-cache specs.
+
+    KV leaves are (R, B, Hkv, T, dh): batch over (pod, data) when it
+    divides; KV heads over ``model`` when they divide, else the cache
+    *sequence* shards over ``model`` (long-context batch-1 cells).
+    Recurrent states (mamba/xlstm) shard batch and the channel dim.
+    """
+    dp = fsdp_axes(mesh)
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        if name in ("k", "v") and leaf.ndim == 5:
+            R, B, Hkv, T, dh = leaf.shape
+            b_ax = _maybe(mesh, dp, B) or _maybe(mesh, "data", B)
+            h_ax = _maybe(mesh, "model", Hkv)
+            t_ax = None if h_ax else _maybe(mesh, "model", T)
+            if b_ax is None and t_ax is None and h_ax is None:
+                # batch-1 long-decode: spread sequence over everything
+                t_ax = _maybe(mesh, ("data", "model"), T)
+            return P(None, b_ax, h_ax, t_ax, None)
+        # recurrent state: (R, B, ...) — batch + widest trailing dim
+        B = leaf.shape[1]
+        b_ax = _maybe(mesh, dp, B) or _maybe(mesh, "data", B)
+        spec = [None, b_ax] + [None] * (leaf.ndim - 2)
+        if leaf.ndim >= 3:
+            spec[2] = _maybe(mesh, "model", leaf.shape[2])
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_example)

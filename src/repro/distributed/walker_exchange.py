@@ -1,0 +1,71 @@
+"""Distributed walker routing — the paper's §9.1 design on the TPU mesh.
+
+The graph (and the whole BINGO sampling space) is 1-D vertex-partitioned
+over the ``data`` (× ``pod``) axes; after every local sampling step the
+walkers whose next vertex lives on another shard are shipped with one
+``all_to_all`` — walkers move, structures never do (the paper's explicit
+choice; P2P GPU copies become ICI all-to-all).
+
+``shard_map`` keeps the per-shard view explicit: each shard sorts its
+outgoing walkers by destination shard into fixed-size mailboxes, the
+all_to_all rotates mailboxes, and arrivals are compacted locally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["exchange_walkers", "make_walk_step"]
+
+
+def exchange_walkers(walkers, shard_size: int, num_shards: int,
+                     axis: str = "data"):
+    """Route walkers to their owning shard (inside shard_map).
+
+    ``walkers`` (Wl,) int32 global vertex ids held by this shard (-1 =
+    inactive).  Returns the same-size mailbox of walkers this shard owns
+    after routing; overflow beyond Wl/num_shards per destination pair is
+    dropped (sized so overflow is statistically negligible — the paper's
+    mailbox buffers have the same property).
+    """
+    Wl = walkers.shape[0]
+    cap = Wl // num_shards
+    dest = jnp.where(walkers >= 0, walkers // shard_size, num_shards)
+    order = jnp.argsort(dest)
+    w_sorted = walkers[order]
+    d_sorted = dest[order]
+    idx = jnp.arange(Wl, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             d_sorted[1:] != d_sorted[:-1]])
+    rank = idx - jnp.maximum.accumulate(jnp.where(first, idx, -1))
+    slot = jnp.where((d_sorted < num_shards) & (rank < cap),
+                     d_sorted * cap + rank, num_shards * cap)
+    mailbox = jnp.full((num_shards * cap + 1,), -1, jnp.int32)
+    mailbox = mailbox.at[slot].set(w_sorted, mode="drop")[:-1]
+    mailbox = mailbox.reshape(num_shards, cap)
+    arrived = jax.lax.all_to_all(mailbox, axis, 0, 0, tiled=False)
+    return arrived.reshape(num_shards * cap)
+
+
+def make_walk_step(sample_local, shard_size: int, num_shards: int,
+                   mesh, axis: str = "data"):
+    """Build a shard_mapped distributed walk step.
+
+    ``sample_local(walkers_local, key) -> next_global_vertex`` samples the
+    next hop for walkers whose *current* vertex lives on this shard
+    (callers close over the vertex-sharded BingoState).
+    """
+    def step(walkers, key):
+        nxt = sample_local(walkers, key)
+        return exchange_walkers(nxt, shard_size, num_shards, axis)
+
+    return jax.experimental.shard_map.shard_map(
+        step, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(axis),
+        check_rep=False,
+    )

@@ -1,0 +1,94 @@
+"""Dynamic-update workload builder — the paper's §6.1 three-step recipe.
+
+  (i)   split edges into set A (original − 10·BATCHSIZE) and B (10·BATCHSIZE);
+  (ii)  per update, coin-flip insert vs delete (or force one for the
+        "Insertion"/"Deletion" workloads);
+  (iii) delete a random edge of A, or insert a random edge of B into A.
+
+The initial graph is A; updates come in 10 rounds of BATCHSIZE.  The builder
+tracks A incrementally so deletes always target live edges and inserts never
+duplicate, matching the paper's generator.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["UpdateStream", "make_update_stream"]
+
+
+class UpdateStream(NamedTuple):
+    init_src: np.ndarray   # initial graph (set A)
+    init_dst: np.ndarray
+    init_w: np.ndarray
+    is_insert: np.ndarray  # (rounds, batch) bool
+    u: np.ndarray          # (rounds, batch) int32
+    v: np.ndarray          # (rounds, batch) int32
+    w: np.ndarray          # (rounds, batch) bias of inserted edges
+
+
+def make_update_stream(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                       *, batch_size: int, rounds: int = 10,
+                       mode: str = "mixed", seed: int = 0) -> UpdateStream:
+    """Build the paper's update workload from a full edge list.
+
+    ``mode``: ``insertion`` | ``deletion`` | ``mixed`` (§6.1 "Dynamic
+    updates").  ``batch_size`` is the paper's BATCHSIZE (100K at full scale;
+    laptop benchmarks shrink it proportionally).
+    """
+    rng = np.random.default_rng(seed)
+    m = len(src)
+    total = rounds * batch_size
+    if total >= m:
+        raise ValueError(f"graph too small: {m} edges < {total} updates")
+
+    perm = rng.permutation(m)
+    b_idx, a_idx = perm[:total], perm[total:]
+
+    # Set A as mutable arrays; deletes swap-with-tail so sampling a live
+    # edge is O(1) — mirroring BINGO's own deletion trick host-side.
+    a_src, a_dst, a_w = (src[a_idx].copy(), dst[a_idx].copy(),
+                         w[a_idx].copy())
+    a_len = len(a_src)
+    b_src, b_dst, b_w = src[b_idx], dst[b_idx], w[b_idx]
+    b_pos = 0
+
+    ins = np.zeros((rounds, batch_size), bool)
+    uu = np.zeros((rounds, batch_size), np.int32)
+    vv = np.zeros((rounds, batch_size), np.int32)
+    ww = np.ones((rounds, batch_size), np.int32)
+
+    if mode == "insertion":
+        coin = np.ones((rounds, batch_size), bool)
+    elif mode == "deletion":
+        coin = np.zeros((rounds, batch_size), bool)
+    elif mode == "mixed":
+        coin = rng.random((rounds, batch_size)) < 0.5
+    else:
+        raise ValueError(f"unknown update mode {mode!r}")
+
+    for r in range(rounds):
+        for i in range(batch_size):
+            do_insert = bool(coin[r, i]) and b_pos < len(b_src)
+            if not do_insert and a_len == 0:
+                do_insert = True  # nothing left to delete
+            if do_insert:
+                ins[r, i] = True
+                uu[r, i], vv[r, i], ww[r, i] = (b_src[b_pos], b_dst[b_pos],
+                                                b_w[b_pos])
+                if a_len < len(a_src):
+                    a_src[a_len], a_dst[a_len], a_w[a_len] = (
+                        b_src[b_pos], b_dst[b_pos], b_w[b_pos])
+                    a_len += 1
+                b_pos += 1
+            else:
+                j = int(rng.integers(a_len))
+                uu[r, i], vv[r, i] = a_src[j], a_dst[j]
+                a_len -= 1
+                a_src[j], a_dst[j], a_w[j] = (a_src[a_len], a_dst[a_len],
+                                              a_w[a_len])
+
+    n0 = len(a_idx)
+    return UpdateStream(src[a_idx], dst[a_idx], w[a_idx], ins, uu, vv, ww)

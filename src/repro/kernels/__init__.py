@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for BINGO's compute hot spots.
+
+Each kernel ships three files' worth of surface:
+  * ``<name>.py``  — the ``pl.pallas_call`` + BlockSpec implementation
+    (TPU is the target; validated in interpret mode on CPU);
+  * ``ops.py``     — jit'd public wrappers with interpret-mode dispatch;
+  * ``ref.py``     — pure-jnp oracles the tests ``assert_allclose`` against.
+
+Kernels:
+  * ``walk_sample``     — fused hierarchical BINGO sampling (paper §4.1's
+    O(1) sampling claim, the engine's hottest loop);
+  * ``alias_build``     — batched Vose alias-table construction over the
+    K-entry inter-group rows (paper §4.2's O(K) update claim);
+  * ``radix_hist``      — Eq. 4 radix histograms W(p_k) for group rebuild;
+  * ``flash_attention`` — blockwise attention for the LM-side 32k-prefill
+    cells (runtime path; dry-run cells use the jnp reference so HLO
+    cost_analysis sees the true FLOPs — see DESIGN.md §6).
+"""
+
+from repro.kernels.ops import (alias_build, flash_attention, radix_hist,
+                               walk_sample)
+
+__all__ = ["walk_sample", "alias_build", "radix_hist", "flash_attention"]

@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the wrappers dispatch to the compiled kernels; everywhere
+else (this CPU container, unit tests) they run the same kernel bodies in
+interpret mode.  ``force_ref=True`` routes to the pure-jnp oracle — the
+dry-run/roofline path uses it so HLO cost analysis sees real FLOPs.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.alias_build import alias_build_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.radix_hist import radix_hist_pallas
+from repro.kernels.walk_sample import walk_sample_pallas
+
+__all__ = ["walk_sample", "alias_build", "radix_hist", "flash_attention",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def radix_hist(bias, deg, *, num_k: int, force_ref: bool = False):
+    if force_ref:
+        return _ref.radix_hist_ref(bias, deg, num_k)
+    return radix_hist_pallas(bias, deg, num_k=num_k, interpret=not on_tpu())
+
+
+def alias_build(w, *, force_ref: bool = False):
+    if force_ref:
+        return _ref.alias_build_ref(w)
+    return alias_build_pallas(w, interpret=not on_tpu())
+
+
+def walk_sample(prob, alias, bias, nbr, deg, u, *, force_ref: bool = False):
+    if force_ref:
+        return _ref.walk_sample_ref(prob, alias, bias, nbr, deg,
+                                    u[:, 0], u[:, 1], u[:, 2])
+    return walk_sample_pallas(prob, alias, bias, nbr, deg, u,
+                              interpret=not on_tpu())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, force_ref: bool = False):
+    if force_ref:
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=not on_tpu())

@@ -1,0 +1,64 @@
+"""Pallas kernel: Eq. 4 radix histograms W(p_k) for a tile of vertices.
+
+The group-rebuild path (from_edges / batched refresh) reduces every bias
+row to K digit sums + K member counts.  On GPU the paper does this with one
+thread per edge and atomics; on TPU the whole (Vt, C) bias tile sits in
+VMEM and each of the K outputs is a bit-masked lane reduction — no atomics,
+MXU-adjacent VPU throughput.
+
+Tiling: grid over vertex tiles; BlockSpec keeps a (Vt, C) int32 tile of
+biases (+ a (Vt, 1) degree column) resident in VMEM and emits two (Vt, K)
+tiles.  VMEM budget per step ≈ 4·Vt·(C + 2K) bytes — Vt=256, C=1024, K=16
+is ~1.1 MB, comfortably inside the ~16 MB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["radix_hist_pallas"]
+
+
+def _kernel(bias_ref, deg_ref, dsum_ref, gsize_ref, *, num_k: int):
+    bias = bias_ref[...]                                  # (Vt, C)
+    deg = deg_ref[...]                                    # (Vt, 1)
+    C = bias.shape[-1]
+    valid = jax.lax.broadcasted_iota(jnp.int32, bias.shape, 1) < deg
+    # K is small (<= 32): unrolled bit-masked reductions over the C lanes.
+    dsums, gsizes = [], []
+    for k in range(num_k):
+        digs = jnp.where(valid, (bias >> k) & 1, 0)
+        dsums.append(digs.sum(-1, dtype=jnp.int32))
+        gsizes.append((digs != 0).sum(-1, dtype=jnp.int32))
+    dsum_ref[...] = jnp.stack(dsums, axis=-1)
+    gsize_ref[...] = jnp.stack(gsizes, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_k", "block_v", "interpret"))
+def radix_hist_pallas(bias, deg, *, num_k: int, block_v: int = 256,
+                      interpret: bool = False):
+    """(digitsum, gsize), both (V, K) int32, from (V, C) biases + (V,) deg."""
+    V, C = bias.shape
+    block_v = min(block_v, V)
+    grid = (pl.cdiv(V, block_v),)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_k=num_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_v, num_k), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, num_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((V, num_k), jnp.int32),
+            jax.ShapeDtypeStruct((V, num_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bias, deg[:, None])

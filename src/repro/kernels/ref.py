@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["walk_sample_ref", "alias_build_ref", "radix_hist_ref",
+           "attention_ref"]
+
+
+def radix_hist_ref(bias, deg, num_k: int):
+    """Eq. 4 counters: (digitsum (V, K) int32, gsize (V, K) int32).
+
+    ``bias`` (V, C) int32, ``deg`` (V,) int32. Base-2 digits only (the
+    production radix; §9.2 bases are handled by the pure-JAX path).
+    """
+    C = bias.shape[-1]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < deg[:, None]
+    ks = jnp.arange(num_k, dtype=jnp.int32)
+    digs = (bias[..., None] >> ks) & 1                    # (V, C, K)
+    digs = jnp.where(valid[..., None], digs, 0)
+    return (digs.sum(1, dtype=jnp.int32), (digs != 0).sum(1, dtype=jnp.int32))
+
+
+def alias_build_ref(w):
+    """Vose tables for weight rows ``(V, n)`` -> (prob, alias)."""
+    from repro.core.alias import build_alias
+    t = build_alias(w)
+    return t.prob, t.alias
+
+
+def walk_sample_ref(prob, alias, bias, nbr, deg, u0, u1, u2):
+    """Exact fused BINGO step for gathered per-walker rows.
+
+    Inputs (B = walkers, K = radix groups, C = capacity):
+      prob/alias (B, K) — inter-group alias rows (stage (i));
+      bias (B, C) int32, nbr (B, C) int32, deg (B,) int32 — adjacency rows;
+      u0, u1, u2 (B,) — uniforms (alias bucket, alias coin, intra pick).
+    Returns (nxt (B,) int32, slot (B,) int32); -1 for empty rows.
+
+    Stage (ii) is the TPU-native *exact* intra-group pick: a masked cumsum
+    over the C lanes selects the ⌈u2·|G_k|⌉-th member — one VPU pass, no
+    gmem/inverted-index gather (DESIGN.md §2: those structures exist for
+    *updates*; sampling recomputes membership in-register).
+    """
+    B, K = prob.shape
+    C = bias.shape[-1]
+    n = K
+    i = jnp.minimum((u0 * n).astype(jnp.int32), n - 1)
+    p = jnp.take_along_axis(prob, i[:, None], axis=-1)[:, 0]
+    a = jnp.take_along_axis(alias, i[:, None], axis=-1)[:, 0]
+    k = jnp.where(u1 < p, i, a)                            # (B,) group
+
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < deg[:, None]
+    member = (((bias >> k[:, None]) & 1) != 0) & valid     # (B, C)
+    gsize = member.sum(-1, dtype=jnp.int32)
+    target = jnp.minimum((u2 * gsize).astype(jnp.int32), gsize - 1) + 1
+    cum = jnp.cumsum(member, axis=-1, dtype=jnp.int32)
+    hit = member & (cum == target[:, None])
+    slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    ok = gsize > 0
+    slot = jnp.where(ok, slot, -1)
+    nxt = jnp.where(ok, jnp.take_along_axis(
+        nbr, jnp.maximum(slot, 0)[:, None], axis=-1)[:, 0], -1)
+    return nxt, slot
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                  q_offset=None):
+    """Reference attention: (B, H, S, D) x (B, Hkv, T, D) -> (B, H, S, D).
+
+    GQA-aware *without* materializing repeated KV (grouped einsum);
+    optional sliding window (0 = off).  ``q_offset = T - S`` aligns
+    causality for decode (S=1, T=cache).
+    """
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qg = (q * scale).reshape(B, Hkv, rep, S, D)
+    logits = jnp.einsum("bkrsd,bktd->bkrst", qg, k,
+                        preferred_element_type=jnp.float32)
+    off = (T - S) if q_offset is None else q_offset
+    qpos = jnp.arange(S)[:, None] + off
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,bktd->bkrsd", p, v)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def attention_ref_chunked(q, k, v, *, causal=True, window=0, scale=None,
+                          q_chunk=1024):
+    """Query-chunked attention for long prefill: scans over q blocks so at
+    most a (B, H, q_chunk, T) logits tile is live — the jnp stand-in for
+    the Pallas flash kernel's memory profile (its FLOPs live in a scan
+    body; specs.attn_flops_correction re-multiplies them for §Roofline).
+    """
+    B, H, S, D = q.shape
+    qc = min(q_chunk, S)
+    if S % qc:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale)
+    n = S // qc
+    qs = q.reshape(B, H, n, qc, D).transpose(2, 0, 1, 3, 4)
+
+    def chunk(i, qi):
+        return attention_ref(qi, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=i * qc)
+
+    outs = jax.lax.map(lambda iq: chunk(iq[0], iq[1]),
+                       (jnp.arange(n), qs))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, D)

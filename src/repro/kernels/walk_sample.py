@@ -1,0 +1,106 @@
+"""Pallas kernel: fused hierarchical BINGO sampling for a walker block.
+
+The paper's sampling hot spot (§4.1): stage (i) alias pick over K radix
+groups, stage (ii) uniform pick inside the chosen group.  On GPU each
+walker is a thread chasing pointers through the inter-group table, the
+intra-group neighbor index list and the adjacency row — three dependent
+HBM round-trips.
+
+TPU adaptation (DESIGN.md §2): the per-walker rows (alias row, bias row,
+neighbor row) are gathered once into VMEM, and the whole two-stage sample
+happens in-register:
+
+  stage (i)  one-hot select over the K-lane alias row (no gather unit);
+  stage (ii) *exact* intra-group pick via a bit-masked lane cumsum over the
+             C-lane bias row — selecting the ⌈u2·|G_k|⌉-th member of group
+             k in a single VPU pass.  This subsumes the paper's dense-group
+             rejection AND the gmem/inverted-index lookup: those structures
+             remain necessary for *updates*, but TPU sampling recomputes
+             membership faster than it could gather it.
+
+Grid: walker tiles of Bt; BlockSpec stages (Bt, K) alias rows and (Bt, C)
+bias/neighbor rows.  VMEM ≈ Bt·(2K·4 + 2C·4 + 16) B; Bt=256, C=1024, K=16
+is ~2.2 MB.  All uniforms are fed as inputs so the kernel is replayable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["walk_sample_pallas"]
+
+
+def _kernel(prob_ref, alias_ref, bias_ref, nbr_ref, deg_ref, u_ref,
+            nxt_ref, slot_ref):
+    prob = prob_ref[...]                                  # (Bt, K)
+    alias = alias_ref[...]                                # (Bt, K)
+    bias = bias_ref[...]                                  # (Bt, C)
+    nbr = nbr_ref[...]                                    # (Bt, C)
+    deg = deg_ref[...]                                    # (Bt, 1)
+    u = u_ref[...]                                        # (Bt, 3)
+    Bt, K = prob.shape
+    C = bias.shape[-1]
+    u0, u1, u2 = u[:, 0:1], u[:, 1:2], u[:, 2:3]          # (Bt, 1)
+
+    # stage (i): alias pick over the K-lane row, gather-free one-hot selects
+    colK = jax.lax.broadcasted_iota(jnp.int32, (Bt, K), 1)
+    i = jnp.minimum((u0 * K).astype(jnp.int32), K - 1)    # (Bt, 1)
+    at_i = colK == i
+    p_i = jnp.sum(jnp.where(at_i, prob, 0.0), -1, keepdims=True)
+    a_i = jnp.sum(jnp.where(at_i, alias, 0), -1, keepdims=True)
+    k = jnp.where(u1 < p_i, i, a_i)                       # (Bt, 1) group
+
+    # stage (ii): exact uniform member pick via masked lane cumsum
+    colC = jax.lax.broadcasted_iota(jnp.int32, (Bt, C), 1)
+    valid = colC < deg
+    member = (((bias >> k) & 1) != 0) & valid             # (Bt, C)
+    mi = member.astype(jnp.int32)
+    gsize = mi.sum(-1, keepdims=True)
+    target = jnp.minimum((u2 * gsize).astype(jnp.int32), gsize - 1) + 1
+    cum = jnp.cumsum(mi, axis=-1)
+    hit = member & (cum == target)
+    slot = jnp.argmax(hit, axis=-1)[:, None].astype(jnp.int32)  # (Bt, 1)
+    ok = gsize > 0
+    nxt = jnp.sum(jnp.where(colC == slot, nbr, 0), -1, keepdims=True)
+    slot_ref[...] = jnp.where(ok, slot, -1)
+    nxt_ref[...] = jnp.where(ok, nxt, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def walk_sample_pallas(prob, alias, bias, nbr, deg, u, *,
+                       block_b: int = 256, interpret: bool = False):
+    """Fused BINGO step on gathered rows.
+
+    prob/alias (B, K) f32/i32; bias/nbr (B, C) i32; deg (B,) i32;
+    u (B, 3) uniforms.  Returns (nxt (B,) i32, slot (B,) i32).
+    """
+    B, K = prob.shape
+    C = bias.shape[-1]
+    block_b = min(block_b, B)
+    grid = (pl.cdiv(B, block_b),)
+    nxt, slot = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(prob, alias, bias, nbr, deg[:, None], u)
+    return nxt[:, 0], slot[:, 0]

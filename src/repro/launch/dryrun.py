@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and only the dry-run) runs with 512 placeholder host devices
+# so the production meshes (16x16 and 2x16x16) can be built on this CPU box.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: ``jax.jit(fn, in_shardings, out_shardings).lower(*sds)
+.compile()`` against the production mesh, then record
+``memory_analysis()`` (proves per-device fit), ``cost_analysis()``
+(FLOPs/bytes for §Roofline), and the collective-byte breakdown parsed
+from the optimized HLO.  Results land in experiments/dryrun/ as JSON —
+EXPERIMENTS.md §Dry-run/§Roofline are generated from them.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--arch-filter moe]
+  python -m repro.launch.dryrun --arch bingo-walk --shape walk_step
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import CELLS, SHAPES, get_config
+from repro.launch import hw
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, collective_bytes
+from repro.launch.specs import build_cell
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_nonalias_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = hw.MULTI_POD_CHIPS if multi_pod else hw.SINGLE_POD_CHIPS
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if arch == "bingo-walk":
+        from repro.launch.walk_cell import build_walk_cell
+        cell = build_walk_cell(shape_name, mesh, overrides or {})
+    else:
+        # multi-pod pass proves the pod axis shards; the roofline table is
+        # single-pod only, so multi-pod lowers with rolled scans (fast).
+        cell = build_cell(arch, shape_name, mesh, fast=multi_pod)
+        if overrides:
+            cell.meta.setdefault("overrides", {}).update(overrides)
+
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args_sds)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled)
+    costs = compiled.cost_analysis()
+    cost = costs[0] if isinstance(costs, (list, tuple)) else costs
+    hlo = compiled.as_text()
+    cfg_obj = cell.meta.get("cfg_obj") or get_config(arch)
+    rep = analyze(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                  chips=chips, cost=dict(cost), hlo_text=hlo, mem=mem,
+                  cfg=cfg_obj,
+                  kind=cell.kind, tokens=cell.meta["tokens"],
+                  meta={k: v for k, v in cell.meta.items()
+                        if k != "cfg_obj"})
+    out = rep.to_json()
+    out["compile_seconds"] = t_compile
+    out["hbm_fit"] = mem["total_nonalias_bytes"] <= hw.HBM_BYTES
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = overrides.get("tag", "") if overrides else ""
+    fname = f"{mesh_name}__{arch}__{shape_name}{('__' + tag) if tag else ''}.json"
+    with open(os.path.join(OUT_DIR, fname), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[dryrun] {mesh_name} {arch} {shape_name}: compile {t_compile:.1f}s "
+          f"| mem/dev {mem['total_nonalias_bytes'] / 2**30:.2f} GiB "
+          f"(fit={out['hbm_fit']}) | FLOPs/dev {rep.flops_per_device:.3e} "
+          f"| bytes/dev {rep.bytes_per_device:.3e} "
+          f"| coll/dev {rep.coll_bytes_per_device:.3e} "
+          f"| bottleneck={rep.bottleneck}")
+    print(f"         terms: compute {rep.t_compute * 1e3:.2f} ms | memory "
+          f"{rep.t_memory * 1e3:.2f} ms | collective "
+          f"{rep.t_collective * 1e3:.2f} ms | useful "
+          f"{rep.useful_ratio:.2f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--arch-filter", default="")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    if args.all:
+        todo = [(a, c["shape"].name)
+                for a, cs in CELLS.items() for c in cs if not c["skip"]
+                if args.arch_filter in a]
+        todo.append(("bingo-walk", "walk_step"))
+    else:
+        todo = [(args.arch, args.shape)]
+
+    for mp in meshes:
+        for arch, shape in todo:
+            try:
+                run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures.append((mp, arch, shape, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         f"{[(a, s) for _, a, s, _ in failures]}")
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

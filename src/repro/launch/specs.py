@@ -1,0 +1,315 @@
+"""Per-cell lowering builders: (fn, ShapeDtypeStruct args, shardings).
+
+``build_cell(arch, shape_name, mesh)`` returns everything ``dryrun.py``
+needs to ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*sds)``
+— no real allocation anywhere (ShapeDtypeStruct stand-ins only).
+
+Cell kinds:
+  train    — one optimizer step (grad-accum microbatching + remat per the
+             arch's TRAIN_PLAN);
+  prefill  — full-context forward emitting last-position logits (the
+             realistic prefill: no (B, S, V) logits materialization);
+  decode   — one ``serve_step`` token against a seq_len KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        fsdp_axes, param_pspecs)
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_decode_cache,
+                                init_model, loss_fn)
+from repro.train.optim import OptConfig, OptState, adamw_init
+from repro.train.train_step import make_train_step
+
+__all__ = ["build_cell", "train_plan", "CellSpec"]
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args_sds: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: dict
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def train_plan(cfg: ModelConfig, mesh) -> dict:
+    """Baseline training knobs per arch (the §Perf starting point)."""
+    n_params = cfg.param_count()
+    dp = 1
+    for a in fsdp_axes(mesh):
+        dp *= mesh.shape[a]
+    shape = SHAPES["train_4k"]
+    per_dev_seqs = max(shape.global_batch // dp, 1)
+    per_dev_tokens = per_dev_seqs * shape.seq_len
+    micro = 1
+    while per_dev_tokens // micro > 8192 and per_dev_seqs % (micro * 2) == 0:
+        micro *= 2
+    return {
+        "microbatches": micro,
+        # MoE dense-mask lowering saves (T, E, F) dot outputs under the
+        # "dots" policy — full remat keeps only stage boundaries
+        "remat": "full" if cfg.num_experts else
+                 ("dots" if cfg.d_model >= 4096 else "none"),
+        "moment_dtype": "bfloat16" if n_params >= 5e10 else "float32",
+        # >=100-layer models OOM the host compiling fully-unrolled fwd+bwd;
+        # they lower with the stage scan rolled and analytic multipliers
+        "semi": cfg.num_layers >= 100,
+    }
+
+
+def _params_sds(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_model, cfg), jax.random.key(0))
+
+
+def _batch_sds(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.frontend == "none":
+        return {"inputs": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    return {"embeddings": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def _act_spec(cfg, mesh, seq_len: int):
+    """(B, S, D) boundary-activation constraint: batch×sequence (SP)."""
+    dp = fsdp_axes(mesh)
+    s_ax = "model" if seq_len % mesh.shape["model"] == 0 else None
+    if cfg.chunk_attn and s_ax:
+        # chunk reshape (B, n, c, ...) must stay chunk-aligned per shard
+        if (seq_len // mesh.shape["model"]) % cfg.chunk_attn:
+            s_ax = None
+    return P(dp, s_ax, None)
+
+
+def scan_flops_correction(cfg: ModelConfig, tokens_global: int, chips: int,
+                          train: bool) -> float:
+    """Per-device FLOPs hidden inside time-step scans (costed once by HLO
+    cost analysis): mamba SSM recurrence + sLSTM recurrent matvecs.
+    Approximate (documented in EXPERIMENTS.md §Dry-run)."""
+    per_dev = tokens_global / chips
+    f = 0.0
+    n_mamba = cfg.block_pattern.count("mamba") * cfg.repeats
+    if n_mamba:
+        # per token: exp-discretize + state update + C-contraction ≈ 10 ops
+        f += 10.0 * cfg.mamba_d_inner * cfg.mamba_d_state * per_dev * n_mamba
+    n_slstm = cfg.block_pattern.count("slstm") * cfg.repeats
+    if n_slstm:
+        dh = cfg.d_model // cfg.num_heads
+        f += (8.0 * dh * cfg.d_model + 30.0 * cfg.d_model) * per_dev \
+            * n_slstm
+    return f * (3.0 if train else 1.0)
+
+
+def attn_flops_correction(cfg: ModelConfig, shape, chips: int) -> float:
+    """Long-sequence prefill runs q-chunked attention (flash-like memory);
+    the chunk loop's body is HLO-costed once — re-add the analytic
+    attention FLOPs of the remaining (n-1)/n chunks."""
+    S = shape.seq_len
+    if S < 8192:
+        return 0.0
+    tokens = shape.global_batch * S
+    f = 0.0
+    for slot in range(cfg.stage_period):
+        if cfg.block_pattern[slot] != "attn":
+            continue
+        if cfg.chunk_attn and slot not in cfg.global_attn_slots:
+            avg_ctx, span = cfg.chunk_attn / 2, cfg.chunk_attn
+        elif cfg.sliding_window:
+            avg_ctx, span = min(cfg.sliding_window, S), S
+        else:
+            avg_ctx, span = (S / 2 if cfg.causal else S), S
+        n = max(span // 1024, 1)
+        f += 4.0 * tokens * avg_ctx * cfg.num_heads * cfg.dh \
+            * cfg.repeats * (1.0 - 1.0 / n)
+    return f / chips
+
+
+def moe_flops_scale(cfg: ModelConfig) -> float:
+    """Grouped-GEMM cost fix: the dry-run lowers MoE in dense-mask mode
+    (every expert computed, mask-combined) because XLA has no ragged_dot
+    SPMD rule; the TPU runtime executes grouped top-k compute.  Scale the
+    measured FLOPs by active/dense parameter ratio — exact for the
+    matmul-dominated total, robust to cost-model quirks (EXPERIMENTS.md
+    §Dry-run)."""
+    if not cfg.num_experts:
+        return 1.0
+    return cfg.active_param_count() / cfg.param_count()
+
+
+def _build_train(arch, cfg, shape, mesh, plan, fast=False) -> CellSpec:
+    opt_cfg = OptConfig(moment_dtype=plan["moment_dtype"])
+    micro = plan["microbatches"]
+    params_sds = _params_sds(cfg)
+    semi = plan.get("semi", False) and not fast
+    step = make_train_step(
+        cfg, opt_cfg, remat=plan["remat"], microbatches=micro,
+        # exact HLO cost accounting needs the stage scan unrolled; `fast`
+        # (multi-pod sharding-proof pass, not in the roofline table)
+        # keeps the scan rolled for compile speed; `semi` keeps it rolled
+        # too and corrects analytically (loop_multiplier below)
+        unroll=1 if (fast or semi) else cfg.repeats,
+        act_spec=_act_spec(cfg, mesh, shape.seq_len),
+        grad_spec=param_pspecs(params_sds, cfg, mesh))
+    opt_sds = jax.eval_shape(
+        functools.partial(adamw_init, cfg=opt_cfg), params_sds)
+    batch_sds = _batch_sds(cfg, shape.global_batch, shape.seq_len)
+
+    pspecs = param_pspecs(params_sds, cfg, mesh)
+    opt_specs = OptState(step=P(), mu=pspecs, nu=pspecs)
+    bspecs = batch_pspec(cfg, mesh, batch_sds)
+    in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs), None,
+             _named(mesh, bspecs))
+    out_sh = (_named(mesh, pspecs), _named(mesh, opt_specs), None,
+              None)
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+    # the microbatch loop stays a scan; its body (all stages, unrolled)
+    # is costed once -> multiply FLOPs/bytes/collectives by `micro` and
+    # deduct the (micro-1)x over-count of the optimizer update.  In
+    # `semi` mode the stage scan is rolled too: measured =
+    # opt + (embed/head + stage_body), true = opt + M*(embed/head +
+    # R*stage_body) -> multiplier M*R, deduct M*(R-1)*headembed +
+    # (M*R-1)*opt.
+    opt_flops = 25.0 * cfg.param_count() / chips
+    R = cfg.repeats
+    tokens_g = shape.global_batch * shape.seq_len
+    headembed = 6.0 * tokens_g * cfg.d_model * cfg.vocab_size / chips
+    if semi:
+        mult = micro * R
+        deduct = micro * (R - 1) * (headembed / micro) \
+            + (mult - 1) * opt_flops
+    else:
+        mult = micro
+        deduct = (micro - 1) * opt_flops if micro > 1 else 0.0
+    return CellSpec(
+        arch=arch, shape_name=shape.name, kind="train",
+        fn=lambda p, o, e, b: step(p, o, e, b),
+        args_sds=(params_sds, opt_sds, None, batch_sds),
+        in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(0, 1),
+        meta={"plan": plan, "tokens": shape.global_batch * shape.seq_len,
+              "semi_lowering": semi,
+              "loop_multiplier": mult,
+              "loop_flops_deduct": deduct,
+              "flops_scale": moe_flops_scale(cfg),
+              "scan_flops_correction": scan_flops_correction(
+                  cfg, shape.global_batch * shape.seq_len, chips,
+                  train=True)},
+    )
+
+
+def _build_prefill(arch, cfg, shape, mesh, fast=False) -> CellSpec:
+    params_sds = _params_sds(cfg)
+    batch_sds = _batch_sds(cfg, shape.global_batch, shape.seq_len)
+    batch_sds.pop("targets")
+    act = _act_spec(cfg, mesh, shape.seq_len)
+
+    def prefill(params, batch):
+        from repro.models.model import forward_hidden
+        h, _ = forward_hidden(params, cfg, batch,
+                              unroll=1 if fast else cfg.repeats,
+                              act_spec=act)                # (B, S, D)
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        return h[:, -1].astype(jnp.float32) @ head.astype(jnp.float32)
+
+    pspecs = param_pspecs(params_sds, cfg, mesh)
+    bspecs = batch_pspec(cfg, mesh, batch_sds)
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+    return CellSpec(
+        arch=arch, shape_name=shape.name, kind="prefill",
+        fn=prefill,
+        args_sds=(params_sds, batch_sds),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+        out_shardings=None, donate_argnums=(),
+        meta={"tokens": shape.global_batch * shape.seq_len,
+              "flops_scale": moe_flops_scale(cfg),
+              "scan_flops_correction": scan_flops_correction(
+                  cfg, shape.global_batch * shape.seq_len, chips,
+                  train=False) + attn_flops_correction(cfg, shape, chips)},
+    )
+
+
+def _build_decode(arch, cfg, shape, mesh, fast=False) -> CellSpec:
+    B = shape.global_batch
+    params_sds = _params_sds(cfg)
+    cache_sds = jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, B, shape.seq_len))
+    tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    pspecs = param_pspecs(params_sds, cfg, mesh)
+    cspecs = cache_pspecs(cfg, mesh, cache_sds)
+    dp = fsdp_axes(mesh)
+    tok_spec = P(dp if B % _axis(mesh, dp) == 0 else None)
+
+    def serve_step(params, tokens, pos, cache):
+        return decode_step(params, cfg, tokens, pos, cache,
+                           unroll=1 if fast else cfg.repeats)
+
+    return CellSpec(
+        arch=arch, shape_name=shape.name, kind="decode",
+        fn=serve_step,
+        args_sds=(params_sds, tok_sds, pos_sds, cache_sds),
+        in_shardings=(_named(mesh, pspecs),
+                      NamedSharding(mesh, tok_spec),
+                      NamedSharding(mesh, tok_spec),
+                      _named(mesh, cspecs)),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(3,),
+        meta={"tokens": B, "flops_scale": moe_flops_scale(cfg)},
+    )
+
+
+def _axis(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def build_cell(arch: str, shape_name: str, mesh, fast: bool = False
+               ) -> CellSpec:
+    cfg = get_config(arch)
+    if cfg.num_experts:
+        # SPMD lowering mode: XLA has no ragged_dot partitioning rule
+        # (replicates 52B of expert weights); the dense-mask einsum shards
+        # cleanly and the roofline deducts the phantom compute.
+        cfg = dataclasses.replace(cfg, moe_dispatch="dense")
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        cell = _build_train(arch, cfg, shape, mesh, train_plan(cfg, mesh),
+                            fast)
+    elif shape.kind == "prefill":
+        cell = _build_prefill(arch, cfg, shape, mesh, fast)
+    elif shape.kind == "decode":
+        cell = _build_decode(arch, cfg, shape, mesh, fast)
+    else:
+        raise ValueError(shape.kind)
+    if fast:
+        cell.meta["fast_lowering"] = True
+    return cell

@@ -1,0 +1,151 @@
+"""The paper's own workload as a dry-run cell: one distributed walk step
+plus one batched-update step on the production mesh.
+
+Distribution = paper §9.1: the whole BINGO sampling space is 1-D
+vertex-partitioned over data(×pod); the walk step samples locally with the
+fused hierarchical sampler and the batched-update step runs the §5.2
+insert→delete→rebuild pipeline on a 100K-update batch.  Walker routing
+(where next hops leave the shard) is the gather/all-to-all traffic the
+roofline's collective term captures.
+
+Shapes: ``walk_step`` — one synchronous step of all walkers;
+        ``update_step`` — one batched graph update (100K updates).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import bingo_walk
+from repro.core.dyngraph import BingoConfig, BingoState
+from repro.core.alias import AliasTable
+from repro.core.sampler import sample_neighbor
+from repro.core.updates import batched_update
+from repro.launch.specs import CellSpec
+
+__all__ = ["build_walk_cell"]
+
+
+class _WalkCfgShim:
+    """roofline.analyze duck-type: 'active params' = resident sampling-space
+    int32/float32 words (so useful_ratio reads as touched/resident)."""
+
+    def __init__(self, wcfg, bcfg):
+        self._n = (wcfg.num_vertices * wcfg.capacity * 2        # nbr+bias
+                   + wcfg.num_vertices * bcfg.num_radix * 2     # counters
+                   + wcfg.num_vertices * bcfg.num_inter * 2)    # alias rows
+
+    def active_param_count(self):
+        return self._n
+
+
+def _state_sds(bcfg: BingoConfig) -> BingoState:
+    from repro.core.dyngraph import empty_state
+    return jax.eval_shape(functools.partial(empty_state, bcfg))
+
+
+def _state_specs(bcfg: BingoConfig, mesh) -> BingoState:
+    """Every (V, ...) tensor shards its vertex dim over the FULL device
+    grid — the walk engine has no tensor-parallel work, so the 1-D vertex
+    partition (paper §9.1) uses every chip."""
+    vaxes = tuple(mesh.axis_names)
+
+    def spec(leaf):
+        return P(vaxes, *([None] * (leaf.ndim - 1)))
+
+    sds = _state_sds(bcfg)
+    return jax.tree.map(spec, sds)
+
+
+def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
+    wcfg = bingo_walk.FULL
+    bcfg = BingoConfig(num_vertices=wcfg.num_vertices,
+                       capacity=wcfg.capacity, bias_bits=wcfg.bias_bits,
+                       adaptive=overrides.get("adaptive", True))
+    state_sds = _state_sds(bcfg)
+    sspecs = _state_specs(bcfg, mesh)
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+    dp = tuple(mesh.axis_names)
+
+    if shape_name == "walk_step":
+        W = wcfg.walkers
+        walkers_sds = jax.ShapeDtypeStruct((W,), jnp.int32)
+        key_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        num_shards = 1
+        for a in dp:
+            num_shards *= mesh.shape[a]
+        shard_size = wcfg.num_vertices // num_shards
+
+        # Paper §9.1 realized with shard_map: each vertex shard samples its
+        # resident walkers locally (global ids -> local rows), then one
+        # all_to_all ships walkers to their next vertex's owner.  Walkers
+        # move; sampling structures never do.
+        def walk_step_local(state, walkers, seed):
+            from repro.distributed.walker_exchange import exchange_walkers
+            sidx = jax.lax.axis_index(dp[0])
+            for a in dp[1:]:
+                sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+            key = jax.random.fold_in(jax.random.key(seed[0]), sidx)
+            local = jnp.where(walkers >= 0,
+                              walkers - sidx * shard_size, 0)
+            nxt, _ = sample_neighbor(state, bcfg,
+                                     jnp.clip(local, 0, shard_size - 1),
+                                     key)
+            alive = (walkers >= 0) & (nxt >= 0)
+            nxt = jnp.where(alive, nxt, -1)
+            return exchange_walkers(nxt, shard_size, num_shards, axis=dp)
+
+        from jax.experimental.shard_map import shard_map
+        walk_step = shard_map(
+            walk_step_local, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(dp), sspecs,
+                                   is_leaf=lambda s: isinstance(s, P)),
+                      P(dp), P()),
+            out_specs=P(dp), check_rep=False)
+
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=walk_step,
+            args_sds=(state_sds, walkers_sds,
+                      jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       sspecs,
+                                       is_leaf=lambda s: isinstance(s, P)),
+                          NamedSharding(mesh, P(dp)),
+                          NamedSharding(mesh, P())),
+            out_shardings=NamedSharding(mesh, P(dp)),
+            donate_argnums=(),
+            meta={"tokens": W, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    if shape_name == "update_step":
+        Bu = wcfg.update_batch
+
+        def update_step(state, is_insert, u, v, w):
+            st, stats = batched_update(state, bcfg, is_insert, u, v, w)
+            return st, stats
+
+        upd_sds = (jax.ShapeDtypeStruct((Bu,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32))
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                                is_leaf=lambda s: isinstance(s, P))
+        rep = NamedSharding(mesh, P())
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=update_step,
+            args_sds=(state_sds,) + upd_sds,
+            in_shardings=(state_sh, rep, rep, rep, rep),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+            meta={"tokens": Bu, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    raise ValueError(shape_name)

@@ -1,0 +1,15 @@
+"""Model zoo: every assigned architecture family as composable JAX blocks.
+
+Families: dense GQA transformers (yi/qwen2/llama3/glm4), MoE (mixtral,
+llama4-scout), hybrid Mamba+attention+MoE (jamba), recurrent xLSTM
+(sLSTM/mLSTM), encoder-only audio (hubert), VLM backbone (llava).  One
+unified ``ModelConfig`` + functional init/apply; layers are stacked and
+scanned (MaxText-style) so 126-layer models compile as one stage body.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_model,
+                                init_decode_cache, loss_fn)
+
+__all__ = ["ModelConfig", "init_model", "forward", "loss_fn",
+           "decode_step", "init_decode_cache"]

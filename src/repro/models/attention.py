@@ -1,0 +1,175 @@
+"""GQA attention block: RoPE variants, SWA, chunked-local, QKV bias, cache.
+
+Covers every assigned transformer: full/partial/no rotary, sliding-window
+(mixtral), chunked local + NoPE-global slots (llama4), QKV bias (qwen2),
+non-causal encoder (hubert), and GQA KV head counts from 2 to 16.
+
+Two paths share the math:
+  * ``attention_train``  — full-sequence forward (training / prefill);
+  * ``attention_decode`` — one-token step against a ring KV cache.
+The inner product uses the jnp reference (kernels/ref.attention_ref) so
+compiled HLO carries true FLOPs; the Pallas flash kernel is the TPU
+runtime alternative behind the same signature (kernels/ops.flash_attention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import attention_ref, attention_ref_chunked
+from repro.models.layers import dense_init, rope_partial
+
+_Q_CHUNK_THRESHOLD = 8192   # q-chunk long sequences (flash-like memory)
+
+__all__ = ["init_attention", "attention_train", "attention_decode",
+           "init_kv_cache"]
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    D, H, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * dh), dtype=dtype),
+        "wk": dense_init(ks[1], (D, Hkv * dh), dtype=dtype),
+        "wv": dense_init(ks[2], (D, Hkv * dh), dtype=dtype),
+        "wo": dense_init(ks[3], (H * dh, D),
+                         scale=1.0 / (2 * cfg.num_layers) ** 0.5,
+                         dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions, *, use_rope: bool):
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    if use_rope and cfg.rope_fraction > 0:
+        q = rope_partial(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = rope_partial(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def _window_for_slot(cfg, slot: int) -> tuple[int, bool]:
+    """(effective window, use_rope) for a stage slot."""
+    if slot in cfg.global_attn_slots:
+        return 0, False                       # global NoPE slot (llama4)
+    if cfg.chunk_attn:
+        return cfg.chunk_attn, True           # chunked local ≈ windowed
+    return cfg.sliding_window, True
+
+
+def attention_train(params, cfg, x, positions, slot: int = 0):
+    """Full-sequence attention. x: (B, S, D) -> (B, S, D)."""
+    window, use_rope = _window_for_slot(cfg, slot)
+    q, k, v = _project_qkv(params, cfg, x, positions, use_rope=use_rope)
+    S = x.shape[1]
+    if cfg.chunk_attn and window:
+        # llama4 chunked-local: token t attends within its chunk only.
+        # Implemented as blocked attention over chunk-diagonal blocks.
+        out = _chunked_attention(q, k, v, cfg.chunk_attn, causal=cfg.causal)
+    else:
+        fn = attention_ref_chunked if S >= _Q_CHUNK_THRESHOLD \
+            else attention_ref
+        out = fn(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window)
+        out = out.transpose(0, 2, 1, 3)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
+
+
+def _chunked_attention(q, k, v, chunk: int, *, causal: bool):
+    """Exact chunk-diagonal attention: reshape to (B, n, c, ...) blocks."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    c = min(chunk, S)
+    n = S // c
+    assert S % c == 0, "sequence must be chunk-aligned for chunked attention"
+    # (B, S=n·c, ...) -> (B·n, c, ...): chunks are contiguous along S.
+    qb = q.reshape(B * n, c, H, dh)
+    kb = k.reshape(B * n, c, Hkv, dh)
+    vb = v.reshape(B * n, c, Hkv, dh)
+    fn = attention_ref_chunked if c >= _Q_CHUNK_THRESHOLD else attention_ref
+    out = fn(qb.transpose(0, 2, 1, 3), kb.transpose(0, 2, 1, 3),
+             vb.transpose(0, 2, 1, 3), causal=causal)
+    out = out.transpose(0, 2, 1, 3)
+    return out.reshape(B, S, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, slot: int = 0,
+                  dtype=jnp.bfloat16):
+    """Ring KV cache for one attention layer.
+
+    Window/chunk-bounded slots allocate only the window (the long_500k
+    enabler for mixtral/llama4 local layers); global slots allocate
+    ``max_len``.
+    """
+    window, _ = _window_for_slot(cfg, slot)
+    T = min(max_len, window) if window else max_len
+    Hkv, dh = cfg.num_kv_heads, cfg.dh
+    return {
+        "k": jnp.zeros((batch, Hkv, T, dh), dtype),
+        "v": jnp.zeros((batch, Hkv, T, dh), dtype),
+    }
+
+
+def attention_decode(params, cfg, x, pos, cache, slot: int = 0):
+    """One-token decode. x: (B, 1, D); pos: (B,) absolute positions.
+
+    The cache is a ring buffer of length T: slot ``pos % T``.  Masking uses
+    absolute positions reconstructed from the ring (valid entries are the
+    last min(pos+1, T) tokens).
+    """
+    window, use_rope = _window_for_slot(cfg, slot)
+    q, k, v = _project_qkv(params, cfg, x, pos[:, None], use_rope=use_rope)
+    B = x.shape[0]
+    T = cache["k"].shape[2]
+    widx = (pos % T).astype(jnp.int32)
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    ck = cache["k"].at[bidx, :, widx].set(
+        k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, :, widx].set(
+        v[:, 0].astype(cache["v"].dtype))
+
+    # absolute position of ring slot t: the largest p <= pos with p%T == t
+    tpos = jnp.arange(T, dtype=jnp.int32)[None, :]        # (B, T) ring slots
+    delta = (widx[:, None] - tpos) % T
+    abs_pos = pos[:, None] - delta                        # (B, T)
+    valid = abs_pos >= 0
+    if window:
+        valid &= abs_pos > pos[:, None] - window
+    if cfg.chunk_attn and slot not in cfg.global_attn_slots:
+        valid &= (abs_pos // cfg.chunk_attn) == (pos[:, None]
+                                                 // cfg.chunk_attn)
+
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    rep = H // Hkv
+    # grouped-GQA einsum: never materializes rep-expanded KV
+    qh = (q[:, 0].astype(jnp.float32) * dh ** -0.5
+          ).reshape(B, Hkv, rep, dh)
+    logits = jnp.einsum("bkrd,bktd->bkrt", qh,
+                        ck.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrt,bktd->bkrd", p, cv.astype(jnp.float32)
+                     ).astype(x.dtype)
+    out = out.reshape(B, 1, H * dh) @ params["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,74 @@
+"""Shared layer primitives: norms, MLPs, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "dense_init", "swiglu", "rope", "rope_partial",
+           "init_mlp", "mlp"]
+
+
+def dense_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev = scale / sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """(..., dim/2) rotary angles for integer positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding over the full head dim. x: (B, S, H, dh)."""
+    dh = x.shape[-1]
+    ang = _rope_angles(positions, dh, theta)             # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def rope_partial(x, positions, fraction: float, theta: float = 10000.0):
+    """Partial rotary (glm4): rotate the first ``fraction`` of head dims."""
+    if fraction >= 1.0:
+        return rope(x, positions, theta)
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    return jnp.concatenate([rope(xr, positions, theta), xp], axis=-1)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wi": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params, x):
+    """SwiGLU MLP. x: (..., D)."""
+    dt = x.dtype
+    gate = x @ params["wg"].astype(dt)
+    up = x @ params["wi"].astype(dt)
+    return swiglu(gate, up) @ params["wo"].astype(dt)

@@ -1,0 +1,276 @@
+"""The composable LM: stacked-stage scan over heterogeneous blocks.
+
+``init_model`` stacks each stage-slot's parameters over the R repeats so
+``forward``/``decode_step`` run one ``lax.scan`` whose body executes the
+P-slot stage — a 126-layer llama3 compiles the same single stage body as a
+24-layer qwen2 (MaxText-style; critical for dry-run compile times).
+
+Params are stored fp32 (optimizer master copy); compute casts to
+``cfg.dtype`` (bf16 on TPU).  MoE aux losses accumulate through the scan.
+Frontend-stub archs (llava/hubert) consume precomputed (B, S, D_in)
+embeddings through a learned projector instead of token ids (per spec).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_mlp, mlp, rms_norm
+from repro.models.moe import init_moe, moe_ffn
+
+__all__ = ["init_model", "forward", "forward_hidden", "loss_fn",
+           "decode_step", "init_decode_cache"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_slot(key, cfg: ModelConfig, slot: int, dtype):
+    kind = cfg.block_pattern[slot]
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = attn.init_attention(k1, cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(k1, cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "mamba") and cfg.d_ff:
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.is_moe_slot(slot):
+            p["moe"] = init_moe(k2, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_model(cfg: ModelConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.stage_period + 4)
+    params: Dict[str, Any] = {}
+    params["embed"] = dense_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                                 scale=1.0, dtype=dtype)
+    if cfg.frontend != "none":
+        # modality stub: precomputed frame/patch embeddings -> projector
+        # (token embed above still serves the text side / decode path)
+        params["frontend_proj"] = dense_init(
+            keys[-2], (cfg.d_model, cfg.d_model), dtype=dtype)
+    stages = {}
+    for slot in range(cfg.stage_period):
+        slot_keys = jax.random.split(keys[slot], cfg.repeats)
+        stages[f"slot{slot}"] = jax.vmap(
+            lambda k: _init_slot(k, cfg, slot, dtype))(slot_keys)
+    params["stages"] = stages
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_size),
+                                    dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stage application
+# ---------------------------------------------------------------------------
+
+def _apply_slot_train(slot_params, cfg: ModelConfig, slot: int, x, positions):
+    kind = cfg.block_pattern[slot]
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, slot_params["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        x = x + attn.attention_train(slot_params["attn"], cfg, h, positions,
+                                     slot)
+    elif kind == "mamba":
+        x = x + ssm.mamba_train(slot_params["mamba"], cfg, h)
+    elif kind == "mlstm":
+        x = x + xlstm.mlstm_train(slot_params["mlstm"], cfg, h)
+    elif kind == "slstm":
+        out, _ = xlstm.slstm_apply(slot_params["slstm"], cfg, h)
+        x = x + out
+    if kind in ("attn", "mamba") and cfg.d_ff:
+        h2 = rms_norm(x, slot_params["norm2"], cfg.norm_eps)
+        if cfg.is_moe_slot(slot):
+            out, aux = moe_ffn(slot_params["moe"], h2, cfg.top_k,
+                               dispatch=cfg.moe_dispatch)
+            x = x + out
+        else:
+            x = x + mlp(slot_params["mlp"], h2)
+    return x, aux
+
+
+def _apply_slot_decode(slot_params, cfg: ModelConfig, slot: int, x, pos,
+                       cache_slot):
+    kind = cfg.block_pattern[slot]
+    h = rms_norm(x, slot_params["norm1"], cfg.norm_eps)
+    new_cache = cache_slot
+    if kind == "attn":
+        out, new_cache = attn.attention_decode(slot_params["attn"], cfg, h,
+                                               pos, cache_slot, slot)
+        x = x + out
+    elif kind == "mamba":
+        out, new_cache = ssm.mamba_decode(slot_params["mamba"], cfg, h,
+                                          cache_slot)
+        x = x + out
+    elif kind == "mlstm":
+        out, new_cache = xlstm.mlstm_decode(slot_params["mlstm"], cfg, h,
+                                            cache_slot)
+        x = x + out
+    elif kind == "slstm":
+        out, new_cache = xlstm.slstm_apply(slot_params["slstm"], cfg, h,
+                                           cache_slot)
+        x = x + out
+    if kind in ("attn", "mamba") and cfg.d_ff:
+        h2 = rms_norm(x, slot_params["norm2"], cfg.norm_eps)
+        if cfg.is_moe_slot(slot):
+            out, _ = moe_ffn(slot_params["moe"], h2, cfg.top_k,
+                             dispatch=cfg.moe_dispatch)
+            x = x + out
+        else:
+            x = x + mlp(slot_params["mlp"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, batch):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend != "none" and "embeddings" in batch:
+        return batch["embeddings"].astype(dt) @ \
+            params["frontend_proj"].astype(dt)
+    return params["embed"].astype(dt)[batch["inputs"]]
+
+
+def forward_hidden(params, cfg: ModelConfig, batch, *, remat: str = "none",
+                   unroll: int = 1, act_spec=None):
+    """Backbone only: final hidden states (B, S, D) + MoE aux loss.
+
+    ``unroll`` > 1 unrolls the stage scan (dry-run lowering uses full
+    unroll so HLO cost analysis counts every repeat — while-loop bodies
+    are otherwise costed once).  ``act_spec`` applies a sharding
+    constraint (e.g. batch×sequence Megatron-SP) to the inter-stage
+    activations — the boundary-tensor memory lever at 405B scale.
+    """
+    x = _embed(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def constrain(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    def stage(x, stage_params):
+        aux = jnp.float32(0.0)
+        x = constrain(x)
+        for slot in range(cfg.stage_period):
+            x, a = _apply_slot_train(stage_params[f"slot{slot}"], cfg, slot,
+                                     x, positions)
+            aux = aux + a
+        return constrain(x), aux
+
+    if remat == "full":
+        stage = jax.checkpoint(stage)
+    elif remat == "dots":
+        stage = jax.checkpoint(
+            stage, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    x, auxs = jax.lax.scan(stage, x, params["stages"], unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, auxs.sum()
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: str = "none",
+            unroll: int = 1, act_spec=None):
+    """Full-sequence forward. Returns (logits (B, S, V), aux_loss)."""
+    x, aux = forward_hidden(params, cfg, batch, remat=remat, unroll=unroll,
+                            act_spec=act_spec)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: str = "none",
+            unroll: int = 1, act_spec=None):
+    """Mean CE over valid targets (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, batch, remat=remat, unroll=unroll,
+                          act_spec=act_spec)
+    targets = batch["targets"]
+    valid = (targets >= 0).astype(jnp.float32)
+    tsafe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tsafe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1.0)
+    ce = (nll * valid).sum() / denom
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "tokens": valid.sum()}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _init_cache_slot(cfg: ModelConfig, slot: int, batch: int, max_len: int,
+                     dtype):
+    kind = cfg.block_pattern[slot]
+    if kind == "attn":
+        return attn.init_kv_cache(cfg, batch, max_len, slot, dtype)
+    if kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Per-slot caches stacked over the R scanned repeats."""
+    cache = {}
+    for slot in range(cfg.stage_period):
+        one = _init_cache_slot(cfg, slot, batch, max_len, dtype)
+        cache[f"slot{slot}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.repeats,) + t.shape),
+            one)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
+                unroll: int = 1):
+    """One decode step. tokens (B,) int32, pos (B,) int32 absolute.
+
+    Returns (logits (B, V), new_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    # token decode path (VLM/audio frontends only matter at prefill)
+    x = params["embed"].astype(dt)[tokens][:, None]        # (B, 1, D)
+
+    def stage(x, xs):
+        stage_params, cache_in = xs
+        new_cache = {}
+        for slot in range(cfg.stage_period):
+            x, new_cache[f"slot{slot}"] = _apply_slot_decode(
+                stage_params[f"slot{slot}"], cfg, slot, x, pos,
+                cache_in[f"slot{slot}"])
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(stage, x, (params["stages"], cache),
+                                unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x[:, 0].astype(jnp.float32) @ head.astype(jnp.float32)
+    return logits, new_cache

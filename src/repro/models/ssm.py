@@ -1,0 +1,155 @@
+"""Mamba-1 selective-SSM block (jamba's recurrent layer).
+
+Training path scans the discretized SSM along time with ``lax.scan`` (body
+compiles once regardless of S); decode keeps O(1) state — a (Di, d_conv-1)
+conv ring + a (Di, N) SSM state — which is what makes jamba a ``run`` cell
+for long_500k (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_cache"]
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    Di = cfg.mamba_d_inner
+    N = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dtr = cfg.mamba_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus ∈ [1e-3, 0.1]
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (Di,), jnp.float32)
+                      * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))      # inv-softplus
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (dc, Di), dtype=dtype),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "x_proj": dense_init(ks[2], (Di, dtr + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, Di), dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "Dskip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (Di, D), dtype=dtype),
+    }
+
+
+def _ssm_inputs(params, cfg, xz):
+    """Shared projections: (x_conv, res, dt, B_ssm, C_ssm)."""
+    Di, N, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+    x, res = jnp.split(xz, 2, axis=-1)
+    return x, res
+
+
+def _dt_bc(params, cfg, xc):
+    N, dtr = cfg.mamba_d_state, cfg.mamba_dt_rank
+    dt = xc.dtype
+    proj = xc @ params["x_proj"].astype(dt)
+    dt_r, B, C = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(
+        (dt_r @ params["dt_proj"].astype(dt)).astype(jnp.float32)
+        + params["dt_bias"])
+    return delta, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+_CHUNK = 64   # time-chunk length for the rematerialized selective scan
+
+
+def mamba_train(params, cfg, x):
+    """x: (B, S, D) -> (B, S, D).
+
+    Selective scan runs *chunked*: an outer scan over S/_CHUNK chunks
+    carries only the (B, Di, N) state; each chunk body recomputes its
+    discretization (dA, dBx) in-register and is wrapped in
+    ``jax.checkpoint``, so the backward pass saves one small state per
+    chunk boundary instead of (B, S, Di, N) linearization residuals —
+    the naive formulation's 100s-of-GB blowup at jamba scale.
+    """
+    Bb, S, D = x.shape
+    Di, N, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dt = x.dtype
+    xz = x @ params["in_proj"].astype(dt)                  # (B, S, 2Di)
+    xc, res = _ssm_inputs(params, cfg, xz)
+
+    # depthwise causal conv along S
+    pad = jnp.pad(xc, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * params["conv_w"][i].astype(dt)
+               for i in range(dc)) + params["conv_b"].astype(dt)
+    xc = jax.nn.silu(conv.astype(jnp.float32)).astype(dt)
+
+    delta, Bs, Cs = _dt_bc(params, cfg, xc)                # (B,S,Di),(B,S,N)²
+    A = -jnp.exp(params["A_log"])                          # (Di, N)
+    dx = delta * xc.astype(jnp.float32)                    # (B,S,Di)
+
+    L = min(_CHUNK, S)
+    assert S % L == 0, "sequence must divide the mamba chunk length"
+    nch = S // L
+
+    def chunk(h, inp):
+        delta_c, dx_c, B_c, C_c = inp                      # (L,B,...) each
+
+        def step(h, t_inp):
+            d_t, dx_t, B_t, C_t = t_inp
+            dA_t = jnp.exp(d_t[..., None] * A)             # (B,Di,N)
+            h = dA_t * h + dx_t[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+
+        return jax.lax.scan(step, h, (delta_c, dx_c, B_c, C_c))
+
+    chunk = jax.checkpoint(chunk)
+
+    def to_chunks(t):                                      # (B,S,...) ->
+        t = jnp.moveaxis(t, 1, 0)                          # (S,B,...)
+        return t.reshape((nch, L) + t.shape[1:])           # (nch,L,B,...)
+
+    h0 = jnp.zeros((Bb, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk, h0, (to_chunks(delta), to_chunks(dx), to_chunks(Bs),
+                    to_chunks(Cs)))
+    y = jnp.moveaxis(ys.reshape((S, Bb, Di)), 0, 1)        # (B,S,Di)
+    y = y + xc.astype(jnp.float32) * params["Dskip"]
+    y = (y * jax.nn.silu(res.astype(jnp.float32))).astype(dt)
+    return y @ params["out_proj"].astype(dt)
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    Di, N, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, dc - 1, Di), dtype),
+        "ssm": jnp.zeros((batch, Di, N), jnp.float32),
+    }
+
+
+def mamba_decode(params, cfg, x, cache):
+    """One-token step. x: (B, 1, D) -> ((B, 1, D), cache)."""
+    Bb = x.shape[0]
+    Di, N, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dt = x.dtype
+    xz = x[:, 0] @ params["in_proj"].astype(dt)            # (B, 2Di)
+    xc, res = jnp.split(xz, 2, axis=-1)
+
+    hist = jnp.concatenate([cache["conv"].astype(dt), xc[:, None]], 1)
+    conv = (jnp.einsum("bcd,cd->bd", hist, params["conv_w"].astype(dt))
+            + params["conv_b"].astype(dt))
+    new_conv = hist[:, 1:]
+    xcs = jax.nn.silu(conv.astype(jnp.float32)).astype(dt)
+
+    delta, Bs, Cs = _dt_bc(params, cfg, xcs[:, None])
+    delta, Bs, Cs = delta[:, 0], Bs[:, 0], Cs[:, 0]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(delta[..., None] * A)                     # (B,Di,N)
+    h = dA * cache["ssm"] + \
+        (delta * xcs.astype(jnp.float32))[..., None] * Bs[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cs)
+    y = y + xcs.astype(jnp.float32) * params["Dskip"]
+    y = (y * jax.nn.silu(res.astype(jnp.float32))).astype(dt)
+    out = (y @ params["out_proj"].astype(dt))[:, None]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,217 @@
+"""xLSTM blocks — mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM trains in its parallel (attention-like) form and decodes with the
+O(1) recurrent form; ``tests/test_models.py`` asserts the two forms agree,
+which pins the stabilized-gate math.  sLSTM has no parallel form (its
+recurrence is nonlinear) and scans in both modes — the paper's own
+trade-off.  Block layout follows xLSTM §4: mLSTM uses a pre-up-projection
+(pf=2) gated residual block; sLSTM uses a post-up/down (pf=4/3) block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["init_mlstm", "mlstm_train", "mlstm_decode", "init_mlstm_cache",
+           "init_slstm", "slstm_apply", "init_slstm_cache"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    Di = int(cfg.xlstm_pf * D)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "wq": dense_init(ks[1], (Di, Di), dtype=dtype),
+        "wk": dense_init(ks[2], (Di, Di), dtype=dtype),
+        "wv": dense_init(ks[3], (Di, Di), dtype=dtype),
+        "w_if": dense_init(ks[4], (Di, 2 * H), dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "gn": jnp.ones((Di,), jnp.float32),
+        "w_down": dense_init(ks[5], (Di, D), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, x_in):
+    """Projections shared by both forms. x_in: (B, S, Di)."""
+    dt = x_in.dtype
+    q = x_in @ params["wq"].astype(dt)
+    k = x_in @ params["wk"].astype(dt)
+    v = x_in @ params["wv"].astype(dt)
+    gates = (x_in.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    return q, k, v, gates
+
+
+def _heads(x, H):
+    B, S, Di = x.shape
+    return x.reshape(B, S, H, Di // H).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+
+def mlstm_train(params, cfg, x):
+    """Parallel (quadratic) stabilized mLSTM. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Di = int(cfg.xlstm_pf * D)
+    dt = x.dtype
+    up = x @ params["w_up"].astype(dt)
+    x_in, z = jnp.split(up, 2, axis=-1)                    # (B,S,Di) each
+    q, k, v, gates = _mlstm_qkvif(params, x_in)
+    qh, kh, vh = _heads(q, H), _heads(k, H), _heads(v, H)  # (B,H,S,dh)
+    dh = Di // H
+    ig = gates[..., :H].transpose(0, 2, 1)                 # (B,H,S) log-i
+    fg = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)  # log-f
+
+    cum = jnp.cumsum(fg, axis=-1)                          # (B,H,S)
+    # log D[t,s] = cum[t] - cum[s] + i[s]  for s <= t
+    logD = cum[..., :, None] - cum[..., None, :] + ig[..., None, :]
+    tril = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(tril, logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1)                             # (B,H,S) stabilizer
+    Dmat = jnp.exp(logD - m[..., None])
+
+    Smat = jnp.einsum("bhsd,bhtd->bhst", qh.astype(jnp.float32),
+                      kh.astype(jnp.float32)) * dh ** -0.5
+    W = Smat * Dmat
+    denom = jnp.maximum(jnp.abs(W.sum(-1)), jnp.exp(-m))   # (B,H,S)
+    h = jnp.einsum("bhst,bhtd->bhsd", W, vh.astype(jnp.float32))
+    h = h / denom[..., None]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, Di)
+    h = rms_norm(h.astype(dt), params["gn"], cfg.norm_eps)  # head group-norm
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return out @ params["w_down"].astype(dt)
+
+
+def init_mlstm_cache(cfg, batch: int):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = int(cfg.xlstm_pf * D) // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, cfg, x, cache):
+    """O(1) recurrent step. x: (B, 1, D) -> ((B, 1, D), cache)."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    D = cfg.d_model
+    Di = int(cfg.xlstm_pf * D)
+    dh = Di // H
+    dt = x.dtype
+    up = x @ params["w_up"].astype(dt)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, gates = _mlstm_qkvif(params, x_in)
+    qh = q[:, 0].reshape(B, H, dh).astype(jnp.float32)
+    kh = k[:, 0].reshape(B, H, dh).astype(jnp.float32) * dh ** -0.5
+    vh = v[:, 0].reshape(B, H, dh).astype(jnp.float32)
+    ig = gates[:, 0, :H]                                    # (B,H) log-i
+    fg = jax.nn.log_sigmoid(gates[:, 0, H:])                # (B,H) log-f
+
+    m_new = jnp.maximum(fg + cache["m"], ig)
+    fp = jnp.exp(fg + cache["m"] - m_new)[..., None]
+    ip = jnp.exp(ig - m_new)[..., None]
+    C = fp[..., None] * cache["C"] + \
+        ip[..., None] * kh[..., :, None] * vh[..., None, :]
+    n = fp * cache["n"] + ip * kh
+    num = jnp.einsum("bhde,bhd->bhe", C, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, Di)
+    h = rms_norm(h.astype(dt), params["gn"], cfg.norm_eps)
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return out @ params["w_down"].astype(dt), \
+        {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    dff = int(D * 4 / 3)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(ks[0], (D, 4 * D), dtype=dtype),   # z,i,f,o from x
+        "r_h": dense_init(ks[1], (H, dh, 4 * dh), dtype=dtype),  # block-diag
+        "b": jnp.concatenate([jnp.zeros((2 * D,)), 3.0 * jnp.ones((D,)),
+                              jnp.zeros((D,))]).astype(jnp.float32),
+        "gn": jnp.ones((D,), jnp.float32),
+        "w_up": dense_init(ks[2], (D, 2 * dff), dtype=dtype),
+        "w_down": dense_init(ks[3], (dff, D), dtype=dtype),
+    }
+
+
+def init_slstm_cache(cfg, batch: int):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    return {
+        "c": jnp.zeros((batch, H, dh), jnp.float32),
+        "n": jnp.full((batch, H, dh), 1e-6, jnp.float32),
+        "h": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def _slstm_cell(params, cfg, xt, state):
+    """One sLSTM step. xt: (B, 4D) preactivations from x."""
+    B = xt.shape[0]
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r_h"].astype(jnp.float32))
+    pre = xt.astype(jnp.float32).reshape(B, H, 4 * dh) + rec + \
+        params["b"].reshape(H, 4 * dh)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)                # (B,H,dh) each
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    # exponential gates with per-head stabilizer state m
+    i_max = jnp.max(i, axis=-1)                            # (B,H)
+    m_new = jnp.maximum(jnp.max(f, -1) + m, i_max)
+    ip = jnp.exp(i - m_new[..., None])
+    fp = jnp.exp(f + m[..., None] - m_new[..., None])
+    c_new = fp * c + ip * z
+    n_new = jnp.maximum(fp * n + ip, 1e-6)
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params, cfg, x, cache=None):
+    """sLSTM block: scan the cell, then the pf=4/3 gated FFN.
+
+    x: (B, S, D).  Returns (out, cache) — cache is the final cell state
+    (used as decode state; S=1 performs exactly one step).
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+    if cache is None:
+        cache = init_slstm_cache(cfg, B)
+    pre = x @ params["w_x"].astype(dt)                     # (B,S,4D)
+
+    def step(state, xt):
+        state = _slstm_cell(params, cfg, xt, state)
+        return state, state["h"]
+
+    state, hs = jax.lax.scan(step, cache, pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D)          # (S,B,H,dh)->(B,S,D)
+    h = rms_norm(h.astype(dt), params["gn"], cfg.norm_eps)
+    up = h @ params["w_up"].astype(dt)
+    g, u = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(g.astype(jnp.float32)).astype(dt) * u) \
+        @ params["w_down"].astype(dt)
+    return out, state

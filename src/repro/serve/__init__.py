@@ -1,0 +1,5 @@
+"""Serving substrate: batched decode engine with continuous batching."""
+
+from repro.serve.engine import DecodeEngine, ServeRequest
+
+__all__ = ["DecodeEngine", "ServeRequest"]

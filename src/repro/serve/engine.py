@@ -1,0 +1,108 @@
+"""Batched decode engine with continuous batching over a fixed slot pool.
+
+A production-shape serving loop at laptop scale: ``B`` decode slots share
+one stacked cache; finished requests free their slot, queued requests
+claim it (their prompt is prefilled token-by-token into the slot's cache
+lane — chunked prefill).  The jitted inner step is a single
+``decode_step`` across all slots — exactly the ``serve_step`` the
+decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import decode_step, init_decode_cache
+
+__all__ = ["ServeRequest", "DecodeEngine"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg, params, *, slots: int = 8, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = init_decode_cache(cfg, slots, max_len,
+                                       dtype=jnp.float32)
+        self.pos = np.zeros(slots, np.int64)
+        self.slot_req: List[Optional[ServeRequest]] = [None] * slots
+        self.pending: List[ServeRequest] = []
+        self.key = jax.random.key(seed)
+        self._step = jax.jit(
+            lambda p, tok, pos, cache: decode_step(p, cfg, tok, pos, cache))
+
+    def submit(self, req: ServeRequest):
+        self.pending.append(req)
+
+    # -- internals -----------------------------------------------------------
+    def _admit(self):
+        for s in range(self.B):
+            if self.slot_req[s] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slot_req[s] = req
+                self.pos[s] = 0
+                req._prefill_left = list(req.prompt)          # type: ignore
+
+    def step(self) -> List[ServeRequest]:
+        """One engine tick: admit, one fused decode step, collect."""
+        self._admit()
+        tokens = np.zeros(self.B, np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if req._prefill_left:                             # type: ignore
+                tokens[s] = req._prefill_left.pop(0)          # type: ignore
+            else:
+                tokens[s] = req.output[-1] if req.output else \
+                    (req.prompt[-1] if req.prompt else 0)
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.pos, jnp.int32), self.cache)
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            nxt = jax.random.categorical(k, logits / self.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        nxt = np.asarray(nxt)
+
+        finished = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            if req._prefill_left:                             # type: ignore
+                continue                                       # still prefilling
+            req.output.append(int(nxt[s]))
+            if (len(req.output) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.slot_req[s] = None
+        return finished
+
+    def run(self, max_ticks: int = 10_000) -> List[ServeRequest]:
+        done: List[ServeRequest] = []
+        ticks = 0
+        while (self.pending or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            done += self.step()
+            ticks += 1
+        return done

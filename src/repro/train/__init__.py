@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, train step, checkpointing, elasticity."""
+
+from repro.train.optim import (OptConfig, adamw_init, adamw_update,
+                               cosine_schedule)
+from repro.train.train_step import make_train_step
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "make_train_step"]

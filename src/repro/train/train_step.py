@@ -1,0 +1,78 @@
+"""The jittable train step: grad accumulation, remat, compression hooks.
+
+``make_train_step`` closes over static config and returns
+``step(params, opt_state, ef_state, batch) -> (params, opt_state,
+ef_state, metrics)``.  Gradient accumulation scans over ``microbatches``
+splits of the global batch — the activation-memory lever for the
+train_4k cells (DESIGN.md §5); pjit inserts the cross-device reductions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compress import compress_grads
+from repro.models.model import loss_fn
+from repro.train.optim import OptConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, *, remat: str = "dots",
+                    microbatches: int = 1, compress: bool = False,
+                    unroll: int = 1, act_spec=None,
+                    unroll_micro: bool = False, grad_spec=None):
+    def loss_and_grad(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat, unroll=unroll,
+                              act_spec=act_spec), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def constrain_grads(g):
+        # keep the grad accumulator sharded like the params — without the
+        # constraint the SPMD partitioner may replicate the scan carry
+        # (hundreds of GB/device at 50B+ scale)
+        if grad_spec is None:
+            return g
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s), g,
+            grad_spec)
+
+    def step(params, opt_state, ef_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                loss, metrics, grads = loss_and_grad(params, mb)
+                gsum, lsum = carry
+                gsum = constrain_grads(
+                    jax.tree.map(jnp.add, gsum, constrain_grads(grads)))
+                return (gsum, lsum + loss), metrics
+            g0 = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0.0)), mbatch,
+                unroll=microbatches if unroll_micro else 1)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = loss_and_grad(params, batch)
+
+        grads, ef_state = compress_grads(grads, ef_state, enabled=compress)
+        params, opt_state, opt_m = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        return params, opt_state, ef_state, \
+            {"loss": loss, **metrics, **opt_m}
+
+    return step

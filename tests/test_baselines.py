@@ -1,0 +1,65 @@
+"""The four comparison samplers must all realize Eq. 2 (different costs)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import (AliasBaseline, ITSBaseline,
+                                  RejectionBaseline, ReservoirBaseline,
+                                  adj_from_edges)
+from tests.conftest import empirical_dist, random_graph, tv_distance
+
+BACKENDS = [AliasBaseline, ITSBaseline, RejectionBaseline, ReservoirBaseline]
+
+
+@pytest.mark.parametrize("cls", BACKENDS)
+def test_baseline_distribution(cls):
+    V, C = 8, 8
+    adj = adj_from_edges(V, C, np.array([2, 2, 2]), np.array([1, 4, 5]),
+                         np.array([5.0, 4.0, 3.0]))
+    eng = cls.build(adj)
+    B = 30000
+    u = jnp.full((B,), 2, jnp.int32)
+    nxt = eng.sample(u, jax.random.key(0))
+    got = empirical_dist(nxt, V)
+    want = np.zeros(V)
+    want[[1, 4, 5]] = np.array([5, 4, 3]) / 12
+    assert tv_distance(got, want) < 0.02, cls.__name__
+
+
+@pytest.mark.parametrize("cls", BACKENDS)
+def test_baseline_update_then_distribution(cls):
+    V, C = 8, 8
+    adj = adj_from_edges(V, C, np.array([2, 2, 2]), np.array([1, 4, 5]),
+                         np.array([5.0, 4.0, 3.0]))
+    eng = cls.build(adj)
+    eng = eng.insert(jnp.int32(2), jnp.int32(3), jnp.float32(3.0))
+    eng = eng.delete(jnp.int32(2), jnp.int32(1))
+    B = 30000
+    u = jnp.full((B,), 2, jnp.int32)
+    nxt = eng.sample(u, jax.random.key(1))
+    got = empirical_dist(nxt, V)
+    want = np.zeros(V)
+    want[[4, 5, 3]] = np.array([4, 3, 3]) / 10
+    assert tv_distance(got, want) < 0.02, cls.__name__
+
+
+@pytest.mark.parametrize("cls", BACKENDS)
+def test_baseline_random_graph(cls):
+    V, C = 10, 12
+    src, dst, w = random_graph(V, C, max_bias=31, seed=6)
+    adj = adj_from_edges(V, C, src, dst, w.astype(np.float32))
+    eng = cls.build(adj)
+    B = 30000
+    for u0 in [0, 5]:
+        u = jnp.full((B,), u0, jnp.int32)
+        nxt = eng.sample(u, jax.random.key(u0))
+        got = empirical_dist(nxt, V)
+        want = np.zeros(V)
+        for s, d, ww in zip(src, dst, w):
+            if s == u0:
+                want[d] += ww
+        want = want / want.sum()
+        assert tv_distance(got, want) < 0.025, (cls.__name__, u0)

@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.alias_build import alias_build_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.radix_hist import radix_hist_pallas
+from repro.kernels.walk_sample import walk_sample_pallas
+
+
+# ---------------------------------------------------------------------------
+# radix_hist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,C,K", [(4, 8, 4), (17, 32, 16), (64, 128, 8)])
+def test_radix_hist_matches_ref(V, C, K):
+    rng = np.random.default_rng(V * C)
+    bias = jnp.asarray(rng.integers(0, 1 << K, (V, C)), jnp.int32)
+    deg = jnp.asarray(rng.integers(0, C + 1, V), jnp.int32)
+    ds_k, gs_k = radix_hist_pallas(bias, deg, num_k=K, block_v=16,
+                                   interpret=True)
+    ds_r, gs_r = ref.radix_hist_ref(bias, deg, K)
+    np.testing.assert_array_equal(np.asarray(ds_k), np.asarray(ds_r))
+    np.testing.assert_array_equal(np.asarray(gs_k), np.asarray(gs_r))
+
+
+# ---------------------------------------------------------------------------
+# alias_build
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,K", [(1, 2), (7, 5), (33, 16), (128, 33)])
+def test_alias_build_matches_ref(V, K):
+    rng = np.random.default_rng(V + K)
+    w = jnp.asarray(rng.random((V, K)) * rng.integers(1, 100, (V, K)),
+                    jnp.float32)
+    # a few empty + single-entry rows
+    w = w.at[0].set(0.0)
+    if V > 2:
+        w = w.at[1, 1:].set(0.0)
+    p_k, a_k = alias_build_pallas(w, block_v=32, interpret=True)
+    p_r, a_r = ref.alias_build_ref(w)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+def test_alias_build_encodes_distribution():
+    from repro.core.alias import AliasTable, alias_probs
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(0, 50, (16, 9)), jnp.float32)
+    w = w.at[:, 0].max(1.0)
+    p, a = alias_build_pallas(w, interpret=True)
+    enc = np.asarray(alias_probs(AliasTable(p, a)))
+    want = np.asarray(w) / np.asarray(w).sum(-1, keepdims=True)
+    np.testing.assert_allclose(enc, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# walk_sample
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,C,K", [(8, 16, 8), (300, 64, 16), (64, 256, 12)])
+def test_walk_sample_matches_ref(B, C, K):
+    rng = np.random.default_rng(B + C + K)
+    bias = jnp.asarray(rng.integers(0, 1 << K, (B, C)), jnp.int32)
+    nbr = jnp.asarray(rng.integers(0, 1000, (B, C)), jnp.int32)
+    deg = jnp.asarray(rng.integers(1, C + 1, B), jnp.int32)
+    from repro.core.alias import build_alias
+    ws = jnp.where(
+        jnp.arange(C)[None, :] < deg[:, None], bias, 0)
+    digs = ((ws[..., None] >> jnp.arange(K)) & 1).sum(1) * (2 ** jnp.arange(K))
+    t = build_alias(digs.astype(jnp.float32))
+    u = jnp.asarray(rng.random((B, 3)), jnp.float32)
+    nxt_k, slot_k = walk_sample_pallas(t.prob, t.alias, bias, nbr, deg, u,
+                                       block_b=64, interpret=True)
+    nxt_r, slot_r = ref.walk_sample_ref(t.prob, t.alias, bias, nbr, deg,
+                                        u[:, 0], u[:, 1], u[:, 2])
+    np.testing.assert_array_equal(np.asarray(slot_k), np.asarray(slot_r))
+    np.testing.assert_array_equal(np.asarray(nxt_k), np.asarray(nxt_r))
+
+
+def test_walk_sample_distribution_thm41():
+    """End-to-end: the fused kernel realizes Eq. 2 on the running example."""
+    from repro.core.alias import build_alias
+    B = 30000
+    bias_row = np.array([5, 4, 3, 0], np.int32)
+    nbr_row = np.array([1, 4, 5, -1], np.int32)
+    K = 4
+    digs = ((bias_row[:3, None] >> np.arange(K)) & 1).sum(0) * 2 ** np.arange(K)
+    t = build_alias(jnp.asarray(digs, jnp.float32)[None])
+    prob = jnp.broadcast_to(t.prob, (B, K))
+    alias = jnp.broadcast_to(t.alias, (B, K))
+    bias = jnp.broadcast_to(jnp.asarray(bias_row), (B, 4))
+    nbr = jnp.broadcast_to(jnp.asarray(nbr_row), (B, 4))
+    deg = jnp.full((B,), 3, jnp.int32)
+    u = jax.random.uniform(jax.random.key(0), (B, 3))
+    nxt, _ = walk_sample_pallas(prob, alias, bias, nbr, deg, u,
+                                interpret=True)
+    counts = np.bincount(np.asarray(nxt), minlength=6)
+    got = counts / counts.sum()
+    want = np.zeros(6)
+    want[[1, 4, 5]] = np.array([5, 4, 3]) / 12
+    assert 0.5 * np.abs(got - want).sum() < 0.015
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Hkv,S,T,D",
+    [
+        (1, 4, 4, 128, 128, 64),     # MHA square
+        (2, 8, 2, 128, 128, 64),     # GQA 4:1
+        (1, 4, 4, 64, 256, 64),      # decode-ish: S < T
+        (1, 2, 1, 256, 256, 128),    # D=128
+    ])
+def test_flash_attention_matches_ref(B, H, Hkv, S, T, D, dtype):
+    rng = np.random.default_rng(S + T + H)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), dtype)
+    out_k = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+    out_r = ref.attention_ref(q, k, v, causal=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(window)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    out_k = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                   block_q=64, block_k=64, interpret=True)
+    out_r = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    out_k = flash_attention_pallas(q, k, v, causal=False, block_q=64,
+                                   block_k=64, interpret=True)
+    out_r = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests — system invariants under arbitrary updates.
+
+Strategy: random initial graph + random interleaved insert/delete sequence;
+after applying through the *streaming* path and through the *batched* path,
+all structural invariants (invariants.check_state) must hold and the final
+edge multiset must match a host-side reference simulator.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.invariants import check_state
+from repro.core.updates import (batched_update, delete_edge, insert_edge,
+                                two_phase_delete)
+from tests.conftest import HostRef
+
+V, C = 6, 10
+
+update_seq = st.lists(
+    st.tuples(
+        st.booleans(),                       # insert?
+        st.integers(0, V - 1),               # u
+        st.integers(0, V - 1),               # v
+        st.integers(1, 31),                  # w
+    ),
+    min_size=1, max_size=25,
+)
+
+init_edges = st.lists(
+    st.tuples(st.integers(0, V - 1), st.integers(0, V - 1),
+              st.integers(1, 31)),
+    min_size=0, max_size=12,
+)
+
+
+def _edge_multiset(state):
+    deg = np.asarray(state.deg)
+    nbr = np.asarray(state.nbr)
+    bias = np.asarray(state.bias)
+    out = []
+    for u in range(nbr.shape[0]):
+        for s in range(deg[u]):
+            out.append((u, int(nbr[u, s]), int(bias[u, s])))
+    return sorted(out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(init=init_edges, seq=update_seq, adaptive=st.booleans())
+def test_streaming_invariants_hold(init, seq, adaptive):
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5,
+                      adaptive=adaptive)
+    src = np.array([e[0] for e in init] or [0], np.int32)
+    dst = np.array([e[1] for e in init] or [1], np.int32)
+    w = np.array([e[2] for e in init] or [1], np.int32)
+    init = init or [(0, 1, 1)]
+    stt = from_edges(cfg, src, dst, w)
+    ref = HostRef(V, C, init)
+    for ins, u, v, ww in seq:
+        if ins:
+            stt, _ = insert_edge(stt, cfg, u, v, ww)
+            ref.insert(u, v, ww)
+        else:
+            stt, _ = delete_edge(stt, cfg, u, v)
+            ref.delete(u, v)
+    check_state(stt, cfg)
+    assert _edge_multiset(stt) == ref.edges()
+
+
+@settings(max_examples=25, deadline=None)
+@given(init=init_edges, seq=update_seq, adaptive=st.booleans())
+def test_batched_invariants_hold(init, seq, adaptive):
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5,
+                      adaptive=adaptive)
+    init = init or [(0, 1, 1)]
+    src = np.array([e[0] for e in init], np.int32)
+    dst = np.array([e[1] for e in init], np.int32)
+    w = np.array([e[2] for e in init], np.int32)
+    stt = from_edges(cfg, src, dst, w)
+    ins = jnp.array([s[0] for s in seq])
+    uu = jnp.array([s[1] for s in seq], jnp.int32)
+    vv = jnp.array([s[2] for s in seq], jnp.int32)
+    ww = jnp.array([s[3] for s in seq], jnp.int32)
+    st2, _ = batched_update(stt, cfg, ins, uu, vv, ww)
+    check_state(st2, cfg)
+    # batched semantics: all inserts land before any delete (§5.2 staging)
+    ref = HostRef(V, C, init)
+    for s in seq:
+        if s[0]:
+            ref.insert(s[1], s[2], s[3])
+    ref.delete_batched([(s[1], s[2]) for s in seq if not s[0]])
+    assert _edge_multiset(st2) == ref.edges()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(0, 12),
+    mask_bits=st.integers(0, (1 << 12) - 1),
+)
+def test_two_phase_delete_properties(d, mask_bits):
+    Cc = 12
+    vals = np.arange(100, 100 + Cc, dtype=np.int32)
+    dmask = np.array([(mask_bits >> i) & 1 for i in range(Cc)], bool)
+    (nv,), nl, remap = two_phase_delete(
+        ((jnp.asarray(vals), -1),), jnp.asarray(dmask), jnp.int32(d))
+    nv, remap, nl = np.asarray(nv), np.asarray(remap), int(nl)
+    eff = dmask & (np.arange(Cc) < d)
+    survivors = vals[:d][~eff[:d]]
+    assert nl == len(survivors)
+    assert set(nv[:nl].tolist()) == set(survivors.tolist())
+    assert (nv[nl:] == -1).all()
+    # no two survivors share a destination slot
+    live = remap[(np.arange(Cc) < d) & ~eff]
+    assert len(set(live.tolist())) == len(live)

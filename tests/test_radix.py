@@ -1,0 +1,51 @@
+"""Unit tests for radix decomposition (paper Eq. 3/4, §4.3, §9.2)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import radix
+
+
+@pytest.mark.parametrize("base_log2", [1, 2, 4])
+def test_digits_reconstruct_bias(base_log2):
+    K = radix.num_groups(16, base_log2)
+    w = jnp.arange(0, 1 << 16, 257, dtype=jnp.int32)
+    digs = radix.digits(w, K, base_log2)
+    scale = (1 << base_log2) ** np.arange(K)
+    recon = (np.asarray(digs) * scale).sum(-1)
+    np.testing.assert_array_equal(recon, np.asarray(w))
+
+
+def test_digit_membership_matches_eq3():
+    # base 2: digit_at(w, k) != 0  <=>  w & 2^k != 0  (Eq. 3)
+    w = np.arange(64, dtype=np.int32)
+    for k in range(6):
+        got = np.asarray(radix.digit_at(jnp.asarray(w), k, 1))
+        np.testing.assert_array_equal(got != 0, (w & (1 << k)) != 0)
+
+
+@pytest.mark.parametrize("base_log2", [1, 2])
+def test_group_weights_eq4(base_log2):
+    K = radix.num_groups(8, base_log2)
+    w = jnp.array([5, 4, 3, 9, 250], jnp.int32)
+    digs = radix.digits(w, K, base_log2)            # (5, K)
+    gw = radix.group_weights(digs.sum(0), base_log2)
+    # Eq. 4: W(p_k) = sum_i digit_k(w_i) * B^k; totals preserve sum(w)
+    assert float(gw.sum()) == float(w.sum())
+
+
+def test_num_groups():
+    assert radix.num_groups(16, 1) == 16
+    assert radix.num_groups(16, 2) == 8
+    assert radix.num_groups(5, 2) == 3
+
+
+@pytest.mark.parametrize("lam", [10.0, 16.0, 64.0])
+def test_decompose_fp_exact(lam):
+    b = jnp.array([0.554, 0.726, 0.320, 1e-3, 12.7], jnp.float32)
+    ip, fp = radix.decompose_fp(b, lam)
+    assert ip.dtype == jnp.int32 and fp.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(ip) + np.asarray(fp),
+                               np.asarray(b) * lam, rtol=1e-6)
+    assert (np.asarray(fp) >= 0).all() and (np.asarray(fp) < 1).all()

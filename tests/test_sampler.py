@@ -1,0 +1,103 @@
+"""Theorem 4.1 — the factorized sampler reproduces Eq. 2 exactly.
+
+Empirical TV-distance tests over: base-2 integer biases (adaptive and
+baseline group layouts), floating-point biases (§4.3 decimal group), and
+radix base 4 (§9.2).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.sampler import sample_group, sample_neighbor, transition_probs
+from repro.core import radix
+from tests.conftest import empirical_dist, random_graph, tv_distance
+
+B = 30000
+
+
+def _check_vertex_dist(state, cfg, u, n_vertices, tol=0.02):
+    us = jnp.full((B,), u, jnp.int32)
+    nxt, _ = sample_neighbor(state, cfg, us, jax.random.key(u + 1))
+    got = empirical_dist(nxt, n_vertices)
+    want = np.zeros(n_vertices)
+    probs = np.asarray(transition_probs(state, cfg, us[:1]))[0]
+    nbrs = np.asarray(state.nbr[u])
+    for slot, p in enumerate(probs):
+        if p > 0:
+            want[nbrs[slot]] += p
+    assert tv_distance(got, want) < tol, (u, got, want)
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_thm41_running_example(adaptive):
+    src = np.array([2, 2, 2], np.int32)
+    dst = np.array([1, 4, 5], np.int32)
+    w = np.array([5, 4, 3], np.int32)
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=4,
+                      adaptive=adaptive)
+    st = from_edges(cfg, src, dst, w)
+    _check_vertex_dist(st, cfg, 2, 8)
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_thm41_random_graphs(adaptive, seed):
+    V, C = 12, 16
+    src, dst, w = random_graph(V, C, max_bias=63, seed=seed)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=6,
+                      adaptive=adaptive)
+    st = from_edges(cfg, src, dst, w)
+    for u in range(0, V, 3):
+        _check_vertex_dist(st, cfg, u, V)
+
+
+def test_thm41_fp_bias():
+    # paper Fig. 7: biases 0.554 / 0.726 / 0.320 at λ=10
+    src = np.array([2, 2, 2], np.int32)
+    dst = np.array([1, 4, 5], np.int32)
+    w = np.array([0.554, 0.726, 0.320], np.float32)
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=4,
+                      fp_bias=True, lam=10.0)
+    st = from_edges(cfg, src, dst, w)
+    us = jnp.full((B,), 2, jnp.int32)
+    nxt, _ = sample_neighbor(st, cfg, us, jax.random.key(7))
+    got = empirical_dist(nxt, 8)
+    want = np.zeros(8)
+    for d, ww in zip(dst, w):
+        want[d] = ww / w.sum()
+    assert tv_distance(got, want) < 0.02
+
+
+def test_fp_decimal_mass_bound():
+    # §4.4: λ chosen so W_D/(W_I+W_D) < 1/d keeps sampling O(1).
+    w = np.array([0.554, 0.726, 0.320], np.float32)
+    lam = 10.0
+    ip, fp = radix.decompose_fp(jnp.asarray(w), lam)
+    W_D, W_I = float(fp.sum()), float(ip.sum())
+    assert W_D / (W_I + W_D) < 1.0 / len(w)
+
+
+@pytest.mark.parametrize("base_log2", [2])
+def test_thm41_radix_base4(base_log2):
+    # supplement §9.2 — digits in {1..3}, intra-group digit acceptance
+    V, C = 10, 8
+    src, dst, w = random_graph(V, C, max_bias=63, seed=3)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=6,
+                      base_log2=base_log2)
+    st = from_edges(cfg, src, dst, w)
+    for u in [0, 4, 8]:
+        _check_vertex_dist(st, cfg, u, V)
+
+
+def test_group_marginal_matches_eq5(tiny_state):
+    st, cfg = tiny_state
+    us = jnp.full((B,), 2, jnp.int32)
+    k = sample_group(st, cfg, us, jax.random.key(0))
+    got = empirical_dist(k, cfg.num_radix)
+    wts = np.asarray(st.digitsum[2]).astype(np.float64) * \
+        (2.0 ** np.arange(cfg.num_radix))
+    assert tv_distance(got, wts / wts.sum()) < 0.015

@@ -1,0 +1,227 @@
+"""Streaming (§4.2) and batched (§5.2) update correctness.
+
+Every test drives updates through the incremental path and asserts the full
+set of structural invariants (invariants.check_state) plus equivalence with
+a from-scratch rebuild of the same final edge set.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.invariants import check_state
+from repro.core.sampler import transition_probs
+from repro.core.updates import (batched_update, delete_edge, insert_edge,
+                                stream_updates, two_phase_delete)
+from tests.conftest import HostRef, random_graph
+
+
+def _assert_equiv(st, cfg, edges):
+    """Incremental state must equal a fresh build of `edges` (set equality
+    of (nbr,bias) multisets per vertex + identical counters)."""
+    check_state(st, cfg)
+    V = cfg.num_vertices
+    want = {u: [] for u in range(V)}
+    for u, v, w in edges:
+        want[u].append((v, w))
+    deg = np.asarray(st.deg)
+    nbr = np.asarray(st.nbr)
+    bias = np.asarray(st.bias)
+    for u in range(V):
+        got = sorted(zip(nbr[u, :deg[u]].tolist(), bias[u, :deg[u]].tolist()))
+        assert got == sorted(want[u]), f"vertex {u}: {got} != {sorted(want[u])}"
+
+
+def _assert_matches_ref(st, cfg, ref: HostRef):
+    _assert_equiv(st, cfg, ref.edges())
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_streaming_insert_then_delete(adaptive):
+    cfg = BingoConfig(num_vertices=6, capacity=8, bias_bits=4,
+                      adaptive=adaptive)
+    st = from_edges(cfg, np.array([2, 2, 2]), np.array([1, 4, 5]),
+                    np.array([5, 4, 3]))
+    edges = [(2, 1, 5), (2, 4, 4), (2, 5, 3)]
+
+    # paper Fig. 5: insert (2, 3, 3)
+    st, ok = insert_edge(st, cfg, 2, 3, 3)
+    assert bool(ok)
+    edges.append((2, 3, 3))
+    _assert_equiv(st, cfg, edges)
+
+    # paper Fig. 6: delete (2, 1, 5)
+    st, ok = delete_edge(st, cfg, 2, 1)
+    assert bool(ok)
+    edges.remove((2, 1, 5))
+    _assert_equiv(st, cfg, edges)
+
+    # deleting a non-existent edge is a no-op
+    st2, ok = delete_edge(st, cfg, 2, 1)
+    assert not bool(ok)
+    _assert_equiv(st2, cfg, edges)
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_random_sequences(adaptive, seed):
+    V, C = 8, 12
+    rng = np.random.default_rng(seed)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5,
+                      adaptive=adaptive)
+    src, dst, w = random_graph(V, C, max_bias=31, seed=seed, density=0.4)
+    st = from_edges(cfg, src, dst, w)
+    ref = HostRef(V, C, zip(src.tolist(), dst.tolist(), w.tolist()))
+
+    for step in range(40):
+        live = ref.edges()
+        if rng.random() < 0.5 and live:
+            u, v, _ = live[rng.integers(len(live))]
+            st, ok = delete_edge(st, cfg, u, v)
+            assert bool(ok)
+            assert ref.delete(u, v)
+        else:
+            u = int(rng.integers(V))
+            v = int(rng.integers(V))
+            ww = int(rng.integers(1, 32))
+            st, ok = insert_edge(st, cfg, u, v, ww)
+            assert bool(ok) == ref.insert(u, v, ww)
+        if step % 10 == 9:
+            _assert_matches_ref(st, cfg, ref)
+    _assert_matches_ref(st, cfg, ref)
+
+
+def test_stream_updates_scan_matches_loop():
+    V, C = 6, 8
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=4)
+    src, dst, w = random_graph(V, C, max_bias=15, seed=5, density=0.3)
+    st0 = from_edges(cfg, src, dst, w)
+    ins = jnp.array([True, True, False, True])
+    uu = jnp.array([0, 1, 0, 2], jnp.int32)
+    vv = jnp.array([3, 4, 3, 5], jnp.int32)
+    ww = jnp.array([7, 9, 1, 3], jnp.int32)
+    st_scan, oks = stream_updates(st0, cfg, ins, uu, vv, ww)
+    st_loop = st0
+    for i in range(4):
+        if bool(ins[i]):
+            st_loop, _ = insert_edge(st_loop, cfg, uu[i], vv[i], ww[i])
+        else:
+            st_loop, _ = delete_edge(st_loop, cfg, uu[i], vv[i])
+    for a, b in zip(jax.tree.leaves(st_scan), jax.tree.leaves(st_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# two-phase parallel delete-and-swap (paper Fig. 10(b))
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_two_phase_delete_row(seed):
+    rng = np.random.default_rng(seed)
+    C = 16
+    d = int(rng.integers(1, C + 1))
+    vals = np.full(C, -1, np.int32)
+    vals[:d] = rng.permutation(100)[:d]
+    dmask = np.zeros(C, bool)
+    dmask[:d] = rng.random(d) < 0.4
+    (new_vals,), new_len, remap = two_phase_delete(
+        ((jnp.asarray(vals), -1),), jnp.asarray(dmask), jnp.int32(d))
+    new_vals, remap = np.asarray(new_vals), np.asarray(remap)
+    survivors = set(vals[:d][~dmask[:d]].tolist())
+    assert int(new_len) == len(survivors)
+    # compaction: surviving prefix holds exactly the survivors, tail is fill
+    assert set(new_vals[:int(new_len)].tolist()) == survivors
+    assert (new_vals[int(new_len):] == -1).all()
+    # remap correctness: old slot i lives at remap[i]
+    for i in range(d):
+        if dmask[i]:
+            assert remap[i] == -1
+        else:
+            assert new_vals[remap[i]] == vals[i]
+
+
+def test_two_phase_delete_all_and_none():
+    C, d = 8, 5
+    vals = jnp.arange(C, dtype=jnp.int32)
+    none = jnp.zeros(C, bool)
+    (nv,), nl, _ = two_phase_delete(((vals, -1),), none, jnp.int32(d))
+    assert int(nl) == d
+    np.testing.assert_array_equal(np.asarray(nv)[:d], np.arange(d))
+    allm = jnp.concatenate([jnp.ones(d, bool), jnp.zeros(C - d, bool)])
+    (nv,), nl, rm = two_phase_delete(((vals, -1),), allm, jnp.int32(d))
+    assert int(nl) == 0
+    assert (np.asarray(rm)[:d] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# batched updates (§5.2): insert → delete → rebuild
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("adaptive", [True, False])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_batched_matches_fresh_build(adaptive, seed):
+    V, C = 10, 16
+    rng = np.random.default_rng(seed)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5,
+                      adaptive=adaptive)
+    src, dst, w = random_graph(V, C, max_bias=31, seed=seed, density=0.4)
+    st = from_edges(cfg, src, dst, w)
+    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+
+    Bn = 24
+    ins, uu, vv, ww = [], [], [], []
+    live = list(edges)
+    for _ in range(Bn):
+        if rng.random() < 0.5 and live:
+            j = int(rng.integers(len(live)))
+            u, v, _ = live.pop(j)
+            ins.append(False); uu.append(u); vv.append(v); ww.append(1)
+        else:
+            u, v = int(rng.integers(V)), int(rng.integers(V))
+            k = int(rng.integers(1, 32))
+            ins.append(True); uu.append(u); vv.append(v); ww.append(k)
+
+    st2, stats = batched_update(
+        st, cfg, jnp.asarray(ins), jnp.asarray(uu, jnp.int32),
+        jnp.asarray(vv, jnp.int32), jnp.asarray(ww, jnp.int32))
+
+    # reference: all inserts land before any delete (the paper's §5.2 order)
+    ref = HostRef(V, C, edges)
+    for i in range(Bn):
+        if ins[i]:
+            ref.insert(uu[i], vv[i], ww[i])
+    ref.delete_batched([(uu[i], vv[i]) for i in range(Bn) if not ins[i]])
+    _assert_matches_ref(st2, cfg, ref)
+    assert int(stats.ins_applied) == sum(ins)
+
+
+def test_batched_insert_then_delete_same_edge():
+    # paper §5.2: "one might insert a just deleted edge back; we allow
+    # duplicated insertions ... when deletion happens to a duplicated edge,
+    # we delete the earlier version first."
+    cfg = BingoConfig(num_vertices=4, capacity=8, bias_bits=4)
+    st = from_edges(cfg, np.array([0]), np.array([1]), np.array([3]))
+    ins = jnp.array([True, False])
+    uu = jnp.array([0, 0], jnp.int32)
+    vv = jnp.array([1, 1], jnp.int32)
+    ww = jnp.array([5, 0], jnp.int32)
+    st2, _ = batched_update(st, cfg, ins, uu, vv, ww)
+    # earlier version (bias 3) deleted; the new (bias 5) one remains
+    _assert_equiv(st2, cfg, [(0, 1, 5)])
+
+
+def test_batched_distribution_after_updates():
+    V, C = 8, 16
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5)
+    src, dst, w = random_graph(V, C, max_bias=31, seed=9, density=0.4)
+    st = from_edges(cfg, src, dst, w)
+    ins = jnp.array([True, True, True, False])
+    uu = jnp.array([0, 0, 0, 0], jnp.int32)
+    vv = jnp.array([5, 6, 7, 5], jnp.int32)
+    ww = jnp.array([8, 2, 16, 0], jnp.int32)
+    st2, _ = batched_update(st, cfg, ins, uu, vv, ww)
+    p = np.asarray(transition_probs(st2, cfg, jnp.array([0], jnp.int32)))[0]
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-5)
