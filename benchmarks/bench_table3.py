@@ -39,9 +39,10 @@ def _walk_all(state, cfg, params, key):
     return walks.random_walk(state, cfg, starts, key, params)
 
 
-def bingo_run(V, stream, params):
+def bingo_run(V, stream, params, backend="reference"):
     st, cfg = build_state(V, stream.init_src, stream.init_dst,
-                          stream.init_w, capacity=CAPACITY)
+                          stream.init_w, capacity=CAPACITY,
+                          backend=backend)
     upd = jax.jit(lambda s, i, u, v, w: batched_update(s, cfg, i, u, v, w)[0])
     wfn = jax.jit(lambda s, k: _walk_all(s, cfg, params, k))
 
@@ -112,9 +113,16 @@ def main():
         for app, params in APPS.items():
             if app != "deepwalk" and mode != "mixed":
                 continue        # keep CPU budget: full grid for deepwalk
-            t_b, m_b = bingo_run(V, stream, params)
+            t_b, m_b = bingo_run(V, stream, params, backend="reference")
             record("table3", f"{app}-{mode}-bingo", "seconds", t_b)
             record("table3", f"{app}-{mode}-bingo", "bytes", m_b)
+            # Fused-kernel backend side by side (compiled on TPU;
+            # interpret-mode emulation elsewhere, where the ratio is a
+            # correctness smoke rather than a perf claim).
+            t_p, _ = bingo_run(V, stream, params, backend="pallas")
+            record("table3", f"{app}-{mode}-bingo-pallas", "seconds", t_p)
+            record("table3", f"{app}-{mode}-bingo-pallas",
+                   "speedup_vs_reference", t_b / max(t_p, 1e-9))
             for name, cls in (("alias_rebuild", AliasBaseline),
                               ("its_rebuild", ITSBaseline),
                               ("reservoir", ReservoirBaseline)):

@@ -52,10 +52,10 @@ def build_dataset(scale: int = 11, edge_factor: int = 8, *,
 
 def build_state(V, src, dst, w, *, capacity: int = 256,
                 bias_bits: int = 12, adaptive: bool = True,
-                fp_bias: bool = False):
+                fp_bias: bool = False, backend: str = "auto"):
     cfg = BingoConfig(num_vertices=V, capacity=capacity,
                       bias_bits=bias_bits, adaptive=adaptive,
-                      fp_bias=fp_bias)
+                      fp_bias=fp_bias, backend=backend)
     st = from_edges(cfg, src, dst, w)
     return st, cfg
 

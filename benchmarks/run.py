@@ -32,8 +32,19 @@ MODULES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--dry", action="store_true",
+                    help="import-check every bench module and exit "
+                         "without timing anything (CI smoke)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+
+    if args.dry:
+        from repro.core.backend import available_backends
+        for name, mod in MODULES.items():
+            assert callable(mod.main), name
+            print(f"# dry: {name} -> {mod.__name__}.main")
+        print(f"# dry: sampler backends {available_backends()}")
+        return
 
     print("bench,case,metric,value")
     failed = []

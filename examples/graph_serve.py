@@ -7,8 +7,13 @@ around it on the *current* graph snapshot, the walk becomes the prompt
 decode engine.  Graph updates between request waves change what gets
 retrieved.
 
-  PYTHONPATH=src python examples/graph_serve.py
+  PYTHONPATH=src python examples/graph_serve.py [backend]
+
+``backend`` selects the walk-sampling implementation (reference |
+pallas | auto — DESIGN.md §7); retrieval walks run through it.
 """
+
+import sys
 
 import numpy as np
 
@@ -24,11 +29,13 @@ from repro.serve.engine import DecodeEngine, ServeRequest
 
 
 def main():
+    backend = sys.argv[1] if len(sys.argv) > 1 else "auto"
     scale = 9
     V = 1 << scale
     src, dst = rmat_edges(scale, 8, seed=0)
     w = degree_bias(src, dst, V, bias_bits=8)
-    bcfg = BingoConfig(num_vertices=V, capacity=256, bias_bits=8)
+    bcfg = BingoConfig(num_vertices=V, capacity=256, bias_bits=8,
+                       backend=backend)
     state = from_edges(bcfg, src, dst, w)
 
     cfg = ModelConfig(name="graph-lm", family="dense", num_layers=4,

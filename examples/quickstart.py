@@ -1,32 +1,45 @@
 """Quickstart: BINGO in 60 seconds — build, sample, update, walk.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [backend]
+
+``backend`` picks the sampling implementation (DESIGN.md §7):
+``reference`` (pure jnp), ``pallas`` (fused kernel), or ``auto``
+(default — pallas on TPU, reference elsewhere).
 """
+
+import sys
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import available_backends, get_backend
 from repro.core.dyngraph import BingoConfig, from_edges
-from repro.core.sampler import sample_neighbor, transition_probs
+from repro.core.sampler import transition_probs
 from repro.core.updates import delete_edge, insert_edge
 from repro.core import walks
 
 
 def main():
+    backend = sys.argv[1] if len(sys.argv) > 1 else "auto"
+    print(f"sampler backend: {backend} (available: "
+          f"{', '.join(available_backends())})")
     # The paper's running example (Fig. 1/4): vertex 2 with edges
     # (2,1,5), (2,4,4), (2,5,3).
-    cfg = BingoConfig(num_vertices=8, capacity=8, bias_bits=5)
+    cfg = BingoConfig(num_vertices=8, capacity=8, bias_bits=5,
+                      backend=backend)
     state = from_edges(cfg,
                        src=np.array([2, 2, 2, 1, 4, 5, 3, 0]),
                        dst=np.array([1, 4, 5, 2, 2, 2, 2, 2]),
                        bias=np.array([5, 4, 3, 2, 2, 2, 2, 1]))
 
-    # O(1) hierarchical sampling realizes Eq. 2 exactly (Thm 4.1):
+    # O(1) hierarchical sampling realizes Eq. 2 exactly (Thm 4.1) —
+    # through whichever backend cfg selects:
     B = 50_000
     u2 = jnp.full((B,), 2, jnp.int32)
-    nxt, _ = sample_neighbor(state, cfg, u2, jax.random.key(0))
+    nxt, _ = get_backend(cfg.backend).sample_step(
+        state, cfg, u2, jax.random.key(0))
     counts = np.bincount(np.asarray(nxt), minlength=8)
     print("empirical P(v | u=2):",
           dict(zip(range(8), np.round(counts / B, 3))))

@@ -55,7 +55,7 @@ def adj_from_edges(V: int, C: int, src, dst, w) -> AdjState:
     s, d, ww = src[order], dst[order], w[order]
     idx = jnp.arange(s.shape[0], dtype=jnp.int32)
     first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    rank = idx - jnp.maximum.accumulate(jnp.where(first, idx, -1))
+    rank = idx - jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
     ok = rank < C
     nbr = jnp.full((V, C), -1, jnp.int32).at[s, rank].set(
         jnp.where(ok, d, -1), mode="drop")

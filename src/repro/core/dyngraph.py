@@ -58,6 +58,9 @@ class BingoConfig:
     beta: float = 0.10            # sparse threshold (|G|/d < beta)
     fp_bias: bool = False         # §4.3 floating-point biases
     lam: float = 16.0             # λ amortization factor (fp mode)
+    backend: str = "auto"         # sampler backend (core/backend.py):
+                                  # reference | pallas | auto (= pallas on
+                                  # TPU, reference elsewhere)
 
     @property
     def num_radix(self) -> int:
@@ -200,7 +203,7 @@ def _scatter_adjacency(cfg: BingoConfig, src, dst, w_int, w_frac):
     # rank of each edge within its source segment
     first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
     idx = jnp.arange(s.shape[0], dtype=jnp.int32)
-    seg_start = jnp.maximum.accumulate(jnp.where(first, idx, -1))
+    seg_start = jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
     rank = idx - seg_start
     ok = rank < C
     nbr = jnp.full((V, C), -1, jnp.int32).at[s, rank].set(

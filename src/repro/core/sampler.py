@@ -1,5 +1,13 @@
 """Hierarchical (inter-group -> intra-group) sampling — paper §4.1/§4.3/§5.1.
 
+This module is the *reference* half of the sampling stack (DESIGN.md §7):
+backend-neutral helpers (``sample_group``/``sample_slot``/``_its_rows``,
+the ``transition_probs`` ground truth) plus the registered ``"reference"``
+``SamplerBackend``.  The fused production path is ``core/backend.py``'s
+``"pallas"`` backend over ``kernels/walk_sample.py``; both realize the
+same distribution (Theorem 4.1) and are interchangeable via
+``BingoConfig.backend``.
+
 Stage (i):  O(1) alias pick over the K radix groups (+ decimal group).
 Stage (ii): O(1) pick inside the chosen group:
   * materialized groups (ONE/SPARSE/REGULAR): uniform slot pick from ``gmem``
@@ -11,8 +19,7 @@ Stage (ii): O(1) pick inside the chosen group:
     construction, so the O(C)-lane pass is off the hot path).
 
 Everything is batch-level (B,) code — one fused program per walker step, no
-per-walker Python.  The Pallas kernel ``kernels/walk_sample.py`` mirrors the
-base-2 fast path.
+per-walker Python.
 """
 
 from __future__ import annotations
@@ -24,9 +31,11 @@ import jax.numpy as jnp
 
 from repro.core import radix
 from repro.core.alias import sample_alias
+from repro.core.backend import register_backend
 from repro.core.dyngraph import DENSE, BingoConfig, BingoState
 
-__all__ = ["sample_group", "sample_slot", "sample_neighbor", "transition_probs"]
+__all__ = ["sample_group", "sample_slot", "sample_neighbor",
+           "transition_probs", "ReferenceBackend"]
 
 _MAX_TRIALS = 64  # rejection bound before the exact ITS fallback kicks in
 
@@ -135,6 +144,28 @@ def sample_neighbor(state: BingoState, cfg: BingoConfig, u, key
     k = sample_group(state, cfg, u, kg)
     slot = sample_slot(state, cfg, u, k, ks)
     return state.nbr[u, jnp.maximum(slot, 0)], slot
+
+
+@register_backend
+class ReferenceBackend:
+    """Pure-jnp hierarchical sampler as a ``SamplerBackend``.
+
+    The unfused gather → alias pick → group pick pipeline above, exact in
+    every mode; serves as the portable fallback and the oracle the pallas
+    backend is validated against (tests/test_backend_equiv.py).
+    """
+
+    name = "reference"
+
+    def sample_step(self, state, cfg, u, key):
+        return sample_neighbor(state, cfg, u, key)
+
+    def sample_uniform(self, state, cfg, u, key):
+        B = u.shape[0]
+        dg = jnp.maximum(state.deg[u], 1)
+        j = jnp.minimum(
+            (jax.random.uniform(key, (B,)) * dg).astype(jnp.int32), dg - 1)
+        return state.nbr[u, j], j
 
 
 def transition_probs(state: BingoState, cfg: BingoConfig, u):

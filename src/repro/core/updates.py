@@ -312,7 +312,7 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     wi_s, wf_s = w_int[order], w_frac[order]
     idx = jnp.arange(B, dtype=jnp.int32)
     first = jnp.concatenate([jnp.ones((1,), bool), su_s[1:] != su_s[:-1]])
-    rank = idx - jnp.maximum.accumulate(jnp.where(first, idx, -1))
+    rank = idx - jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
     off = state.deg[jnp.minimum(su_s, V - 1)] + rank
     okA = (su_s < V) & (off < C)
     tgt = jnp.where(okA, off, C)
@@ -329,7 +329,7 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     du_s, dv_s = du[ordD], dv[ordD]
     firstD = jnp.concatenate(
         [jnp.ones((1,), bool), (du_s[1:] != du_s[:-1]) | (dv_s[1:] != dv_s[:-1])])
-    rankD = idx - jnp.maximum.accumulate(jnp.where(firstD, idx, -1))
+    rankD = idx - jax.lax.cummax(jnp.where(firstD, idx, -1), axis=0)
     rows = nbr[jnp.minimum(du_s, V - 1)]                   # (B, C)
     validD = (jnp.arange(C, dtype=jnp.int32)[None, :]
               < deg[jnp.minimum(du_s, V - 1)][:, None])

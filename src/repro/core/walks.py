@@ -13,18 +13,35 @@ per-application policies:
 
 Walkers that terminate (or sit on degree-0 vertices) emit -1 and hold.
 All functions are jittable; ``state``/``cfg`` are closed over per-engine.
+
+Backend selection (DESIGN.md §7): every sample inside the ``lax.scan``
+step is drawn through the ``SamplerBackend`` named by ``cfg.backend`` —
+``"reference"`` (pure-jnp hierarchical sampler), ``"pallas"`` (row gather
++ fused two-stage kernel), or ``"auto"`` (pallas on TPU, reference
+elsewhere; the default).  deepwalk/ppr run the biased step fully fused,
+``simple`` runs the backend's unbiased pick fully fused, and node2vec
+draws its KnightKing-style *proposals* through the backend while the
+history-factor rejection and the exact second-order ITS fallback stay in
+jnp (they need the previous-hop rows, which no gathered-row kernel sees).
+The pallas backend falls back to an in-kernel exact masked-ITS lane pass
+whenever the O(1) happy path cannot realize Eq. 2 alone — the decimal
+group in fp mode, and rejected digit-acceptance proposals for radix bases
+> 2 — so the sampled distribution is identical across backends in every
+mode.  Pass ``backend=`` explicitly to override ``cfg.backend`` for one
+call (benchmarks comparing the two paths do this).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import get_backend
 from repro.core.dyngraph import BingoConfig, BingoState
-from repro.core.sampler import _its_rows, sample_neighbor
+from repro.core.sampler import _its_rows
 
 __all__ = ["WalkParams", "random_walk", "deepwalk", "node2vec", "ppr"]
 
@@ -57,8 +74,15 @@ def _n2v_factor(state, cfg, prev, cand, p, q):
     return jnp.where(dist0, 1.0 / p, jnp.where(dist1, 1.0, 1.0 / q))
 
 
-def _n2v_accept(state, cfg, prev, cur, has_prev, key, params):
-    """Second-order step: BINGO proposal + history-factor rejection."""
+def _n2v_accept(state, cfg, prev, cur, has_prev, key, params, bk=None):
+    """Second-order step: backend proposal + history-factor rejection.
+
+    Proposals come from ``bk.sample_step`` (so the pallas backend fuses
+    them too); the Eq. 1 factor test and the exact second-order ITS
+    fallback are first-class jnp — they read the *previous* vertex's row.
+    """
+    if bk is None:
+        bk = get_backend(cfg.backend)
     B = cur.shape[0]
     fmax = max(1.0 / params.p, 1.0, 1.0 / params.q)
 
@@ -69,7 +93,7 @@ def _n2v_accept(state, cfg, prev, cur, has_prev, key, params):
     def body(c):
         key, nxt, ok, t = c
         key, k1, k2 = jax.random.split(key, 3)
-        cand, _ = sample_neighbor(state, cfg, cur, k1)
+        cand, _ = bk.sample_step(state, cfg, cur, k1)
         f = _n2v_factor(state, cfg, prev, cand, params.p, params.q)
         f = jnp.where(has_prev, f, 1.0)  # first hop is first-order
         accept = jax.random.uniform(k2, (B,)) * fmax < f
@@ -103,27 +127,29 @@ def _n2v_accept(state, cfg, prev, cur, has_prev, key, params):
 
 
 def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
-                params: WalkParams):
+                params: WalkParams, backend: Optional[str] = None):
     """Run a batch of walks; returns ``(B, length + 1)`` int32 paths.
 
     Column 0 holds the start vertices; terminated walkers pad with -1.
+    Samples are drawn through the ``SamplerBackend`` named by
+    ``backend`` (default: ``cfg.backend``) — see the module docstring
+    for how each walk kind maps onto the backend interface.
     """
     B = starts.shape[0]
     alive0 = state.deg[starts] > 0
+    bk = get_backend(cfg.backend if backend is None else backend)
 
     def step(carry, key):
         cur, prev, has_prev, alive = carry
         k1, k2 = jax.random.split(key)
         safe = jnp.maximum(cur, 0)
         if params.kind == "node2vec":
-            nxt = _n2v_accept(state, cfg, prev, safe, has_prev, k1, params)
+            nxt = _n2v_accept(state, cfg, prev, safe, has_prev, k1, params,
+                              bk)
         elif params.kind == "simple":
-            dg = jnp.maximum(state.deg[safe], 1)
-            j = jnp.minimum(
-                (jax.random.uniform(k1, (B,)) * dg).astype(jnp.int32), dg - 1)
-            nxt = state.nbr[safe, j]
+            nxt, _ = bk.sample_uniform(state, cfg, safe, k1)
         else:
-            nxt, _ = sample_neighbor(state, cfg, safe, k1)
+            nxt, _ = bk.sample_step(state, cfg, safe, k1)
         if params.kind == "ppr" and params.stop_prob > 0:
             alive = alive & (jax.random.uniform(k2, (B,)) >= params.stop_prob)
         alive = alive & (state.deg[safe] > 0)
@@ -139,27 +165,32 @@ def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
         [starts[:, None], jnp.swapaxes(path, 0, 1)], axis=1)
 
 
-def deepwalk(state, cfg, starts, key, length: int = 80):
+def deepwalk(state, cfg, starts, key, length: int = 80,
+             backend: Optional[str] = None):
     return random_walk(state, cfg, starts, key,
-                       WalkParams(kind="deepwalk", length=length))
+                       WalkParams(kind="deepwalk", length=length),
+                       backend=backend)
 
 
 def node2vec(state, cfg, starts, key, length: int = 80,
-             p: float = 0.5, q: float = 2.0):
+             p: float = 0.5, q: float = 2.0,
+             backend: Optional[str] = None):
     return random_walk(state, cfg, starts, key,
-                       WalkParams(kind="node2vec", length=length, p=p, q=q))
+                       WalkParams(kind="node2vec", length=length, p=p, q=q),
+                       backend=backend)
 
 
 def ppr(state, cfg, starts, key, max_length: int = 400,
-        stop_prob: float = 1.0 / 80.0):
+        stop_prob: float = 1.0 / 80.0, backend: Optional[str] = None):
     return random_walk(state, cfg, starts, key,
                        WalkParams(kind="ppr", length=max_length,
-                                  stop_prob=stop_prob))
+                                  stop_prob=stop_prob), backend=backend)
 
 
-def make_walker(state: BingoState, cfg: BingoConfig, params: WalkParams):
-    """Jitted walk closure (cfg/params static) for benchmarks/pipeline."""
+def make_walker(state: BingoState, cfg: BingoConfig, params: WalkParams,
+                backend: Optional[str] = None):
+    """Jitted walk closure (cfg/params/backend static) for benchmarks."""
     @functools.partial(jax.jit, static_argnums=())
     def run(st, starts, key):
-        return random_walk(st, cfg, starts, key, params)
+        return random_walk(st, cfg, starts, key, params, backend=backend)
     return run

@@ -41,7 +41,7 @@ def exchange_walkers(walkers, shard_size: int, num_shards: int,
     idx = jnp.arange(Wl, dtype=jnp.int32)
     first = jnp.concatenate([jnp.ones((1,), bool),
                              d_sorted[1:] != d_sorted[:-1]])
-    rank = idx - jnp.maximum.accumulate(jnp.where(first, idx, -1))
+    rank = idx - jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
     slot = jnp.where((d_sorted < num_shards) & (rank < cap),
                      d_sorted * cap + rank, num_shards * cap)
     mailbox = jnp.full((num_shards * cap + 1,), -1, jnp.int32)

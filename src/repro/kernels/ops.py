@@ -36,12 +36,19 @@ def alias_build(w, *, force_ref: bool = False):
     return alias_build_pallas(w, interpret=not on_tpu())
 
 
-def walk_sample(prob, alias, bias, nbr, deg, u, *, force_ref: bool = False):
+def walk_sample(prob, alias, bias, nbr, deg, u, frac=None, *,
+                base_log2: int = 1, force_ref: bool = False):
+    if (base_log2 > 1 or frac is not None) and u.shape[-1] < 5:
+        raise ValueError(
+            f"extended sampling paths need u (B, 5); got (B, {u.shape[-1]})")
     if force_ref:
+        u3 = u[:, 3] if u.shape[-1] > 3 else None
+        u4 = u[:, 4] if u.shape[-1] > 4 else None
         return _ref.walk_sample_ref(prob, alias, bias, nbr, deg,
-                                    u[:, 0], u[:, 1], u[:, 2])
-    return walk_sample_pallas(prob, alias, bias, nbr, deg, u,
-                              interpret=not on_tpu())
+                                    u[:, 0], u[:, 1], u[:, 2], u3, u4,
+                                    frac=frac, base_log2=base_log2)
+    return walk_sample_pallas(prob, alias, bias, nbr, deg, u, frac,
+                              base_log2=base_log2, interpret=not on_tpu())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

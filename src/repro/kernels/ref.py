@@ -30,36 +30,72 @@ def alias_build_ref(w):
     return t.prob, t.alias
 
 
-def walk_sample_ref(prob, alias, bias, nbr, deg, u0, u1, u2):
+def _its_pick_ref(w, x01):
+    """Exact ITS lane pass (mirrors walk_sample.py:_its_pick, row form)."""
+    c = jnp.cumsum(w, axis=-1)
+    total = c[:, -1:]
+    x = x01[:, None] * total
+    idx = jnp.sum((c <= x).astype(jnp.int32), axis=-1)
+    return jnp.minimum(idx, w.shape[-1] - 1)
+
+
+def walk_sample_ref(prob, alias, bias, nbr, deg, u0, u1, u2,
+                    u3=None, u4=None, *, frac=None, base_log2: int = 1):
     """Exact fused BINGO step for gathered per-walker rows.
 
-    Inputs (B = walkers, K = radix groups, C = capacity):
-      prob/alias (B, K) — inter-group alias rows (stage (i));
+    Inputs (B = walkers, Kin = radix groups (+1 decimal in fp mode),
+    C = capacity):
+      prob/alias (B, Kin) — inter-group alias rows (stage (i));
       bias (B, C) int32, nbr (B, C) int32, deg (B,) int32 — adjacency rows;
-      u0, u1, u2 (B,) — uniforms (alias bucket, alias coin, intra pick).
+      u0, u1, u2 (B,) — uniforms (alias bucket, alias coin, intra pick);
+      u3, u4 (B,) — acceptance coin + ITS position, required when
+      ``base_log2 > 1`` or ``frac`` (B, C) float32 is given (fp mode).
     Returns (nxt (B,) int32, slot (B,) int32); -1 for empty rows.
 
     Stage (ii) is the TPU-native *exact* intra-group pick: a masked cumsum
     over the C lanes selects the ⌈u2·|G_k|⌉-th member — one VPU pass, no
     gmem/inverted-index gather (DESIGN.md §2: those structures exist for
-    *updates*; sampling recomputes membership in-register).
+    *updates*; sampling recomputes membership in-register).  Bases > 2 add
+    one digit-proportional acceptance coin with an exact masked-ITS
+    fallback; the decimal group runs an ITS pass over ``frac``
+    (DESIGN.md §7).
     """
-    B, K = prob.shape
+    B, Kin = prob.shape
     C = bias.shape[-1]
-    n = K
+    has_frac = frac is not None
+    n = Kin
     i = jnp.minimum((u0 * n).astype(jnp.int32), n - 1)
     p = jnp.take_along_axis(prob, i[:, None], axis=-1)[:, 0]
     a = jnp.take_along_axis(alias, i[:, None], axis=-1)[:, 0]
     k = jnp.where(u1 < p, i, a)                            # (B,) group
 
+    num_radix = Kin - 1 if has_frac else Kin
+    kc = jnp.minimum(k, num_radix - 1)
     valid = jnp.arange(C, dtype=jnp.int32)[None, :] < deg[:, None]
-    member = (((bias >> k[:, None]) & 1) != 0) & valid     # (B, C)
+    dmask = (1 << base_log2) - 1
+    dig = jnp.where(valid,
+                    (bias >> (kc[:, None] * base_log2)) & dmask, 0)
+    member = dig != 0                                      # (B, C)
     gsize = member.sum(-1, dtype=jnp.int32)
     target = jnp.minimum((u2 * gsize).astype(jnp.int32), gsize - 1) + 1
     cum = jnp.cumsum(member, axis=-1, dtype=jnp.int32)
     hit = member & (cum == target[:, None])
     slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+
+    if base_log2 > 1:
+        dig_c = jnp.take_along_axis(dig, slot[:, None], axis=-1)[:, 0]
+        accept = u3 * jnp.float32(dmask) < dig_c.astype(jnp.float32)
+        slot_its = _its_pick_ref(dig.astype(jnp.float32), u4)
+        slot = jnp.where(accept, slot, slot_its)
     ok = gsize > 0
+
+    if has_frac:
+        is_dec = k == num_radix
+        wf = jnp.where(valid, frac, 0.0)
+        slot_dec = _its_pick_ref(wf, u4)
+        slot = jnp.where(is_dec, slot_dec, slot)
+        ok = jnp.where(is_dec, wf.sum(-1) > 0, ok)
+
     slot = jnp.where(ok, slot, -1)
     nxt = jnp.where(ok, jnp.take_along_axis(
         nbr, jnp.maximum(slot, 0)[:, None], axis=-1)[:, 0], -1)

@@ -1,10 +1,10 @@
 """Pallas kernel: fused hierarchical BINGO sampling for a walker block.
 
 The paper's sampling hot spot (§4.1): stage (i) alias pick over K radix
-groups, stage (ii) uniform pick inside the chosen group.  On GPU each
-walker is a thread chasing pointers through the inter-group table, the
-intra-group neighbor index list and the adjacency row — three dependent
-HBM round-trips.
+groups, stage (ii) pick inside the chosen group.  On GPU each walker is a
+thread chasing pointers through the inter-group table, the intra-group
+neighbor index list and the adjacency row — three dependent HBM
+round-trips.
 
 TPU adaptation (DESIGN.md §2): the per-walker rows (alias row, bias row,
 neighbor row) are gathered once into VMEM, and the whole two-stage sample
@@ -18,9 +18,24 @@ happens in-register:
              remain necessary for *updates*, but TPU sampling recomputes
              membership faster than it could gather it.
 
+Beyond the base-2 integer fast path the kernel covers the full BINGO
+sampling space (DESIGN.md §7):
+
+  * radix bases > 2 (``base_log2 > 1``, supplement §9.2): the uniform
+    member pick becomes a *proposal*; one digit-proportional acceptance
+    coin (accept w.p. digit/(B-1)) keeps the O(1) happy path, and rejected
+    walkers take an exact masked-ITS lane pass over the digit weights —
+    the exact conditional of Eq. 6, so the mixture is digit-proportional
+    and ``transition_probs`` equality holds with no retry loop;
+  * the fp-bias decimal group (§4.3): when stage (i) lands on the decimal
+    group the member pick is an exact ITS lane pass over the gathered
+    ``frac`` row (mass < 1/d by construction, §4.4 — off the hot path).
+
 Grid: walker tiles of Bt; BlockSpec stages (Bt, K) alias rows and (Bt, C)
-bias/neighbor rows.  VMEM ≈ Bt·(2K·4 + 2C·4 + 16) B; Bt=256, C=1024, K=16
-is ~2.2 MB.  All uniforms are fed as inputs so the kernel is replayable.
+bias/neighbor(/frac) rows.  VMEM ≈ Bt·(2K·4 + 3C·4 + 24) B; Bt=256,
+C=1024, K=16 is ~3.2 MB.  All uniforms are fed as inputs so the kernel is
+replayable: 3 per walker for the base-2 integer path, 5 (acceptance coin +
+ITS position) for the extended paths.
 """
 
 from __future__ import annotations
@@ -34,65 +49,129 @@ from jax.experimental import pallas as pl
 __all__ = ["walk_sample_pallas"]
 
 
-def _kernel(prob_ref, alias_ref, bias_ref, nbr_ref, deg_ref, u_ref,
-            nxt_ref, slot_ref):
-    prob = prob_ref[...]                                  # (Bt, K)
-    alias = alias_ref[...]                                # (Bt, K)
+def _its_pick(w, x01):
+    """Exact ITS lane pass: first lane i with cumsum(w)[i] > x01·Σw.
+
+    ``w`` (Bt, C) float32 non-negative, ``x01`` (Bt, 1) in [0, 1).
+    One cumsum + one compare-reduce — a single VPU pass, no gather.
+    """
+    c = jnp.cumsum(w, axis=-1)
+    total = c[:, -1:]
+    x = x01 * total
+    idx = jnp.sum((c <= x).astype(jnp.int32), axis=-1, keepdims=True)
+    return jnp.minimum(idx, w.shape[-1] - 1)
+
+
+def _kernel(base_log2, has_frac, prob_ref, alias_ref, bias_ref, nbr_ref,
+            deg_ref, u_ref, *rest):
+    if has_frac:
+        frac_ref, nxt_ref, slot_ref = rest
+    else:
+        nxt_ref, slot_ref = rest
+    prob = prob_ref[...]                                  # (Bt, Kin)
+    alias = alias_ref[...]                                # (Bt, Kin)
     bias = bias_ref[...]                                  # (Bt, C)
     nbr = nbr_ref[...]                                    # (Bt, C)
     deg = deg_ref[...]                                    # (Bt, 1)
-    u = u_ref[...]                                        # (Bt, 3)
-    Bt, K = prob.shape
+    u = u_ref[...]                                        # (Bt, 3|5)
+    Bt, Kin = prob.shape
     C = bias.shape[-1]
     u0, u1, u2 = u[:, 0:1], u[:, 1:2], u[:, 2:3]          # (Bt, 1)
 
-    # stage (i): alias pick over the K-lane row, gather-free one-hot selects
-    colK = jax.lax.broadcasted_iota(jnp.int32, (Bt, K), 1)
-    i = jnp.minimum((u0 * K).astype(jnp.int32), K - 1)    # (Bt, 1)
+    # stage (i): alias pick over the Kin-lane row, gather-free one-hot
+    # selects.  Kin counts the K radix groups plus, in fp mode, the
+    # decimal group appended by build_itable_rows.
+    colK = jax.lax.broadcasted_iota(jnp.int32, (Bt, Kin), 1)
+    i = jnp.minimum((u0 * Kin).astype(jnp.int32), Kin - 1)  # (Bt, 1)
     at_i = colK == i
     p_i = jnp.sum(jnp.where(at_i, prob, 0.0), -1, keepdims=True)
     a_i = jnp.sum(jnp.where(at_i, alias, 0), -1, keepdims=True)
     k = jnp.where(u1 < p_i, i, a_i)                       # (Bt, 1) group
 
-    # stage (ii): exact uniform member pick via masked lane cumsum
+    num_radix = Kin - 1 if has_frac else Kin
+    kc = jnp.minimum(k, num_radix - 1)
+    is_dec = (k == num_radix) if has_frac else None
+
+    # stage (ii): digit row of the chosen radix group, recomputed in-register
     colC = jax.lax.broadcasted_iota(jnp.int32, (Bt, C), 1)
     valid = colC < deg
-    member = (((bias >> k) & 1) != 0) & valid             # (Bt, C)
+    dmask = (1 << base_log2) - 1
+    dig = jnp.where(valid, (bias >> (kc * base_log2)) & dmask, 0)  # (Bt, C)
+    member = dig != 0
     mi = member.astype(jnp.int32)
     gsize = mi.sum(-1, keepdims=True)
+
+    # uniform member pick via masked lane cumsum (exact for base 2 —
+    # every member carries the same sub-bias 2^k, Eq. 6)
     target = jnp.minimum((u2 * gsize).astype(jnp.int32), gsize - 1) + 1
     cum = jnp.cumsum(mi, axis=-1)
     hit = member & (cum == target)
     slot = jnp.argmax(hit, axis=-1)[:, None].astype(jnp.int32)  # (Bt, 1)
+
+    if base_log2 > 1:
+        # digit-proportional acceptance (§9.2): the uniform pick is only a
+        # proposal; accept w.p. digit/(B-1), else take the exact masked
+        # ITS over the digit weights — the mixture is exactly Eq. 6.
+        u3, u4 = u[:, 3:4], u[:, 4:5]
+        dig_c = jnp.sum(jnp.where(colC == slot, dig, 0), -1, keepdims=True)
+        accept = u3 * jnp.float32((1 << base_log2) - 1) < dig_c.astype(
+            jnp.float32)
+        slot_its = _its_pick(dig.astype(jnp.float32), u4)
+        slot = jnp.where(accept, slot, slot_its)
     ok = gsize > 0
+
+    if has_frac:
+        # decimal group (§4.3): exact ITS over the gathered frac row
+        u4 = u[:, 4:5]
+        wf = jnp.where(valid, frac_ref[...], 0.0)
+        slot_dec = _its_pick(wf, u4)
+        slot = jnp.where(is_dec, slot_dec, slot)
+        ok = jnp.where(is_dec, wf.sum(-1, keepdims=True) > 0, ok)
+
     nxt = jnp.sum(jnp.where(colC == slot, nbr, 0), -1, keepdims=True)
     slot_ref[...] = jnp.where(ok, slot, -1)
     nxt_ref[...] = jnp.where(ok, nxt, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def walk_sample_pallas(prob, alias, bias, nbr, deg, u, *,
-                       block_b: int = 256, interpret: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("base_log2", "block_b", "interpret"))
+def walk_sample_pallas(prob, alias, bias, nbr, deg, u, frac=None, *,
+                       base_log2: int = 1, block_b: int = 256,
+                       interpret: bool = False):
     """Fused BINGO step on gathered rows.
 
-    prob/alias (B, K) f32/i32; bias/nbr (B, C) i32; deg (B,) i32;
-    u (B, 3) uniforms.  Returns (nxt (B,) i32, slot (B,) i32).
+    prob/alias (B, Kin) f32/i32 — Kin = K radix groups (+1 decimal group in
+    fp mode, in which case ``frac`` (B, C) f32 must be passed);
+    bias/nbr (B, C) i32; deg (B,) i32; u (B, 3) uniforms for the base-2
+    integer path, (B, 5) when ``base_log2 > 1`` or ``frac`` is given
+    (cols: alias bucket, alias coin, member pick, acceptance coin, ITS
+    position).  Returns (nxt (B,) i32, slot (B,) i32); -1 on empty rows.
     """
-    B, K = prob.shape
+    B, Kin = prob.shape
     C = bias.shape[-1]
+    NU = u.shape[-1]
+    has_frac = frac is not None
+    if (base_log2 > 1 or has_frac) and NU < 5:
+        raise ValueError(
+            f"extended sampling paths need u (B, 5); got (B, {NU})")
     block_b = min(block_b, B)
     grid = (pl.cdiv(B, block_b),)
+    in_specs = [
+        pl.BlockSpec((block_b, Kin), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, Kin), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, NU), lambda i: (i, 0)),
+    ]
+    args = [prob, alias, bias, nbr, deg[:, None], u]
+    if has_frac:
+        in_specs.append(pl.BlockSpec((block_b, C), lambda i: (i, 0)))
+        args.append(frac)
     nxt, slot = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, base_log2, has_frac),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
@@ -102,5 +181,5 @@ def walk_sample_pallas(prob, alias, bias, nbr, deg, u, *,
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(prob, alias, bias, nbr, deg[:, None], u)
+    )(*args)
     return nxt[:, 0], slot[:, 0]

@@ -21,9 +21,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import bingo_walk
+from repro.core.backend import get_backend
 from repro.core.dyngraph import BingoConfig, BingoState
 from repro.core.alias import AliasTable
-from repro.core.sampler import sample_neighbor
 from repro.core.updates import batched_update
 from repro.launch.specs import CellSpec
 
@@ -65,7 +65,8 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
     wcfg = bingo_walk.FULL
     bcfg = BingoConfig(num_vertices=wcfg.num_vertices,
                        capacity=wcfg.capacity, bias_bits=wcfg.bias_bits,
-                       adaptive=overrides.get("adaptive", True))
+                       adaptive=overrides.get("adaptive", True),
+                       backend=overrides.get("backend", "auto"))
     state_sds = _state_sds(bcfg)
     sspecs = _state_specs(bcfg, mesh)
     chips = 1
@@ -83,9 +84,12 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
         shard_size = wcfg.num_vertices // num_shards
 
         # Paper §9.1 realized with shard_map: each vertex shard samples its
-        # resident walkers locally (global ids -> local rows), then one
-        # all_to_all ships walkers to their next vertex's owner.  Walkers
-        # move; sampling structures never do.
+        # resident walkers locally (global ids -> local rows) through the
+        # configured SamplerBackend (production: the fused Pallas step),
+        # then one all_to_all ships walkers to their next vertex's owner.
+        # Walkers move; sampling structures never do.
+        sampler = get_backend(bcfg.backend)
+
         def walk_step_local(state, walkers, seed):
             from repro.distributed.walker_exchange import exchange_walkers
             sidx = jax.lax.axis_index(dp[0])
@@ -94,9 +98,8 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
             key = jax.random.fold_in(jax.random.key(seed[0]), sidx)
             local = jnp.where(walkers >= 0,
                               walkers - sidx * shard_size, 0)
-            nxt, _ = sample_neighbor(state, bcfg,
-                                     jnp.clip(local, 0, shard_size - 1),
-                                     key)
+            nxt, _ = sampler.sample_step(
+                state, bcfg, jnp.clip(local, 0, shard_size - 1), key)
             alive = (walkers >= 0) & (nxt >= 0)
             nxt = jnp.where(alive, nxt, -1)
             return exchange_walkers(nxt, shard_size, num_shards, axis=dp)

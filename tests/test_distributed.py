@@ -17,8 +17,7 @@ from repro.models import init_decode_cache, init_model
 
 def _mesh():
     # abstract mesh over the single CPU device: spec construction only
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 def _prod_mesh_shape():
@@ -100,8 +99,7 @@ def test_partition_1d():
 
 def test_exchange_walkers_single_shard_semantics():
     """num_shards=1: routing reduces to sort-compact of live walkers."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     from jax.experimental.shard_map import shard_map
 
     W = 16

@@ -83,6 +83,39 @@ def test_walk_sample_matches_ref(B, C, K):
     np.testing.assert_array_equal(np.asarray(nxt_k), np.asarray(nxt_r))
 
 
+@pytest.mark.parametrize("base_log2,fp", [(2, False), (1, True), (2, True)])
+def test_walk_sample_extended_matches_ref(base_log2, fp):
+    """Extended kernel paths (bases > 2, fp decimal group) vs the oracle."""
+    from repro.core.alias import build_alias
+    rng = np.random.default_rng(7 * base_log2 + fp)
+    B, C, bits = 200, 32, 12
+    K = -(-bits // base_log2)
+    bias = jnp.asarray(rng.integers(0, 1 << bits, (B, C)), jnp.int32)
+    nbr = jnp.asarray(rng.integers(0, 1000, (B, C)), jnp.int32)
+    deg = jnp.asarray(rng.integers(1, C + 1, B), jnp.int32)
+    valid = jnp.arange(C)[None, :] < deg[:, None]
+    wb = jnp.where(valid, bias, 0)
+    dmask = (1 << base_log2) - 1
+    digs = (wb[..., None] >> (jnp.arange(K) * base_log2)) & dmask
+    gw = digs.sum(1) * ((1 << base_log2) ** jnp.arange(K, dtype=jnp.float32))
+    frac = None
+    if fp:
+        frac = jnp.asarray(rng.random((B, C)), jnp.float32)
+        wdec = jnp.where(valid, frac, 0.0).sum(-1, keepdims=True)
+        gw = jnp.concatenate([gw, wdec], -1)
+    t = build_alias(gw.astype(jnp.float32))
+    u = jnp.asarray(rng.random((B, 5)), jnp.float32)
+    nxt_k, slot_k = walk_sample_pallas(t.prob, t.alias, bias, nbr, deg, u,
+                                       frac, base_log2=base_log2,
+                                       block_b=64, interpret=True)
+    nxt_r, slot_r = ref.walk_sample_ref(t.prob, t.alias, bias, nbr, deg,
+                                        u[:, 0], u[:, 1], u[:, 2],
+                                        u[:, 3], u[:, 4], frac=frac,
+                                        base_log2=base_log2)
+    np.testing.assert_array_equal(np.asarray(slot_k), np.asarray(slot_r))
+    np.testing.assert_array_equal(np.asarray(nxt_k), np.asarray(nxt_r))
+
+
 def test_walk_sample_distribution_thm41():
     """End-to-end: the fused kernel realizes Eq. 2 on the running example."""
     from repro.core.alias import build_alias

@@ -7,6 +7,10 @@ edge multiset must match a host-side reference simulator.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
