@@ -34,17 +34,18 @@ SCALE = 10
 CAPACITY = 512
 
 
-def _walk_all(state, cfg, params, key):
+def _walk_all(state, cfg, params, key, whole_walk=None):
     starts = jnp.arange(cfg.num_vertices, dtype=jnp.int32)
-    return walks.random_walk(state, cfg, starts, key, params)
+    return walks.random_walk(state, cfg, starts, key, params,
+                             whole_walk=whole_walk)
 
 
-def bingo_run(V, stream, params, backend="reference"):
+def bingo_run(V, stream, params, backend="reference", whole_walk=None):
     st, cfg = build_state(V, stream.init_src, stream.init_dst,
                           stream.init_w, capacity=CAPACITY,
                           backend=backend)
     upd = jax.jit(lambda s, i, u, v, w: batched_update(s, cfg, i, u, v, w)[0])
-    wfn = jax.jit(lambda s, k: _walk_all(s, cfg, params, k))
+    wfn = jax.jit(lambda s, k: _walk_all(s, cfg, params, k, whole_walk))
 
     def run():
         s = st
@@ -116,13 +117,26 @@ def main():
             t_b, m_b = bingo_run(V, stream, params, backend="reference")
             record("table3", f"{app}-{mode}-bingo", "seconds", t_b)
             record("table3", f"{app}-{mode}-bingo", "bytes", m_b)
-            # Fused-kernel backend side by side (compiled on TPU;
-            # interpret-mode emulation elsewhere, where the ratio is a
-            # correctness smoke rather than a perf claim).
-            t_p, _ = bingo_run(V, stream, params, backend="pallas")
-            record("table3", f"{app}-{mode}-bingo-pallas", "seconds", t_p)
-            record("table3", f"{app}-{mode}-bingo-pallas",
+            # Pallas paths side by side (compiled on TPU; interpret-mode
+            # emulation elsewhere, where the ratio is a correctness smoke
+            # rather than a perf claim): the per-step scan (L launches)
+            # vs the whole-walk megakernel (1 launch, DESIGN.md §8).
+            # node2vec has no whole-walk path — per-step only.
+            t_p, _ = bingo_run(V, stream, params, backend="pallas",
+                               whole_walk=False)
+            record("table3", f"{app}-{mode}-bingo-pallas-step", "seconds",
+                   t_p)
+            record("table3", f"{app}-{mode}-bingo-pallas-step",
                    "speedup_vs_reference", t_b / max(t_p, 1e-9))
+            if app != "node2vec":
+                t_f, _ = bingo_run(V, stream, params, backend="pallas",
+                                   whole_walk=True)
+                record("table3", f"{app}-{mode}-bingo-pallas-fused",
+                       "seconds", t_f)
+                record("table3", f"{app}-{mode}-bingo-pallas-fused",
+                       "speedup_vs_reference", t_b / max(t_f, 1e-9))
+                record("table3", f"{app}-{mode}-bingo-pallas-fused",
+                       "speedup_vs_step", t_p / max(t_f, 1e-9))
             for name, cls in (("alias_rebuild", AliasBaseline),
                               ("its_rebuild", ITSBaseline),
                               ("reservoir", ReservoirBaseline)):

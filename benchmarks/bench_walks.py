@@ -1,0 +1,54 @@
+"""Walk throughput: whole-walk fused vs per-step pallas vs reference.
+
+The perf baseline for the megakernel work (DESIGN.md §8): steps/second
+for each walk kind × sampling path, at laptop-scale shapes.  On this CPU
+container the pallas paths run in interpret mode, so the absolute
+numbers are a correctness-weighted smoke rather than a perf claim — the
+meaningful TPU signal is the *launch structure* (1 ``pallas_call`` for
+the fused path vs L for per-step, pinned by tests/test_kernels.py) —
+but the three paths are measured identically and the JSON snapshot
+(``BENCH_walks.json``, written by ``benchmarks/run.py``) gives future
+PRs a trend line.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import build_dataset, build_state, record, walk_rate
+from repro.core import walks
+
+SCALE = 9
+CAPACITY = 128
+WALKERS = 256
+LENGTH = 16
+
+KINDS = {
+    "deepwalk": walks.WalkParams(kind="deepwalk", length=LENGTH),
+    "ppr": walks.WalkParams(kind="ppr", length=LENGTH, stop_prob=1 / 20),
+    "simple": walks.WalkParams(kind="simple", length=LENGTH),
+}
+
+# path -> (backend, whole_walk): the three production-relevant routes
+# through random_walk.  "pallas-fused" is the megakernel (one launch per
+# walk batch); "pallas-step" pins the same sampler to the per-step scan.
+PATHS = {
+    "reference": ("reference", False),
+    "pallas-step": ("pallas", False),
+    "pallas-fused": ("pallas", True),
+}
+
+
+def main():
+    V, src, dst, w = build_dataset(SCALE)
+    st, cfg = build_state(V, src, dst, w, capacity=CAPACITY)
+    starts = jnp.arange(WALKERS, dtype=jnp.int32) % V
+    for kind, params in KINDS.items():
+        for path, (backend, whole) in PATHS.items():
+            rate = walk_rate(st, cfg, params, starts, backend=backend,
+                             whole_walk=whole)
+            record("walks", f"{kind}-{path}", "steps_per_sec", rate)
+
+
+if __name__ == "__main__":
+    main()

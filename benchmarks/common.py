@@ -66,6 +66,30 @@ def state_nbytes(state) -> int:
                    for leaf in jax.tree.leaves(state)))
 
 
+def walk_rate(state, cfg, params, starts, *, backend=None, whole_walk=None,
+              seed: int = 0, reps: int = 3) -> float:
+    """Steps/second of one jitted walk call via ``walks.make_walker``.
+
+    The walker donates and threads the state through (zero-copy across
+    repeated calls — the ``donate_argnums`` contract), so this measures
+    the walk itself, not per-call ``BingoState`` traffic.
+    """
+    from repro.core.walks import make_walker
+    run = make_walker(state, cfg, params, backend=backend,
+                      whole_walk=whole_walk)
+    key = jax.random.key(seed)
+    st = jax.tree.map(jnp.copy, state)   # donation-safe private copy
+    st, _ = jax.block_until_ready(run(st, starts, key))   # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        st, path = run(st, starts, key)
+        jax.block_until_ready(path)
+        ts.append(time.perf_counter() - t0)
+    secs = float(np.median(ts))
+    return starts.shape[0] * params.length / max(secs, 1e-9)
+
+
 def dataset_stream(scale=11, *, batch_size=512, rounds=4, mode="mixed",
                    bias_bits=12, seed=0):
     V, src, dst, w = build_dataset(scale, bias_bits=bias_bits, seed=seed)

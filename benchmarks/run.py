@@ -2,23 +2,28 @@
 
 ``python -m benchmarks.run [--only table3,...]`` prints CSV rows
 ``bench,case,metric,value`` (captured into bench_output.txt for the
-final deliverable) and writes experiments/bench_results.csv.
+final deliverable) and writes experiments/bench_results.csv, plus
+BENCH_walks.json (repo root) — the walk-throughput baseline
+(steps/s per kind × sampling path, incl. the whole-walk fused
+megakernel) that future PRs diff against.
 """
 
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 import traceback
 
 from benchmarks import (bench_batched, bench_complexity, bench_fp_bias,
                         bench_group_adapt, bench_piecewise, bench_sweeps,
-                        bench_table3)
+                        bench_table3, bench_walks)
 from benchmarks.common import ROWS
 
 MODULES = {
+    "walks": bench_walks,            # whole-walk fused vs per-step paths
     "table3": bench_table3,          # paper Table 3
     "complexity": bench_complexity,  # paper Table 1
     "group_adapt": bench_group_adapt,  # paper Fig. 11 + 13
@@ -28,13 +33,53 @@ MODULES = {
     "piecewise": bench_piecewise,    # paper Fig. 16
 }
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write_bench_walks(path: str) -> None:
+    """Persist the walk-throughput rows as {kind-path: steps/s} JSON."""
+    rows = {r["case"]: r["value"] for r in ROWS
+            if r["bench"] == "walks" and r["metric"] == "steps_per_sec"}
+    if not rows:
+        return
+    with open(path, "w") as f:
+        json.dump({"bench": "walks", "metric": "steps_per_sec",
+                   "cases": rows}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
+def _dry_fused_smoke() -> None:
+    """Compile-and-run the megakernel path once at toy scale (interpret
+    mode) so CPU-only CI exercises the whole-walk entry end to end."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import walks
+    from repro.core.dyngraph import BingoConfig, from_edges
+
+    V = 16
+    src = np.arange(V, dtype=np.int32)
+    dst = (src + 1) % V
+    cfg = BingoConfig(num_vertices=V, capacity=4, bias_bits=3,
+                      backend="pallas")
+    st = from_edges(cfg, src, dst, np.ones(V, np.int32) * 3)
+    p = walks.random_walk(st, cfg, jnp.zeros((8,), jnp.int32),
+                          jax.random.key(0),
+                          walks.WalkParams(kind="deepwalk", length=5),
+                          whole_walk=True)
+    assert p.shape == (8, 6), p.shape
+    assert (np.asarray(p) >= 0).all()
+    print("# dry: pallas whole-walk megakernel smoke ok (interpret mode)")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--dry", action="store_true",
-                    help="import-check every bench module and exit "
-                         "without timing anything (CI smoke)")
+                    help="import-check every bench module, run the fused "
+                         "whole-walk smoke, and exit without timing "
+                         "anything (CI smoke)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
@@ -44,6 +89,7 @@ def main() -> None:
             assert callable(mod.main), name
             print(f"# dry: {name} -> {mod.__name__}.main")
         print(f"# dry: sampler backends {available_backends()}")
+        _dry_fused_smoke()
         return
 
     print("bench,case,metric,value")
@@ -66,6 +112,7 @@ def main() -> None:
                                            "value"])
         wr.writeheader()
         wr.writerows(ROWS)
+    _write_bench_walks(os.path.join(REPO_ROOT, "BENCH_walks.json"))
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

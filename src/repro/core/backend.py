@@ -21,6 +21,17 @@ Both backends realize Eq. 2 exactly (Theorem 4.1) for every group type
 ``tests/test_backend_equiv.py`` pins the equivalence against
 ``transition_probs`` ground truth.
 
+Beyond the per-step interface both builtins implement the *whole-walk*
+capability (DESIGN.md §8): ``sample_walk(state, cfg, starts, key,
+params)`` runs an entire L-step walk in one call — the reference backend
+via the ``core/walks.py`` scan, the pallas backend via the persistent
+megakernel (``kernels/walk_fused.py``) that keeps walker state in VMEM
+and issues a single ``pallas_call`` for all L steps.
+``core/walks.py:random_walk`` dispatches whole-walk for
+deepwalk/ppr/simple whenever the resolved backend defines
+``sample_walk`` (node2vec stays on the per-step proposal path — its
+Eq. 1 rejection needs the previous hop's rows).
+
 Registering a new backend:
 
     @register_backend
@@ -28,6 +39,8 @@ Registering a new backend:
         name = "mine"
         def sample_step(self, state, cfg, u, key): ...
         def sample_uniform(self, state, cfg, u, key): ...
+        # optional whole-walk capability:
+        def sample_walk(self, state, cfg, starts, key, params): ...
 """
 
 from __future__ import annotations
@@ -35,7 +48,6 @@ from __future__ import annotations
 from typing import Dict, Protocol, Tuple, runtime_checkable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.dyngraph import BingoConfig, BingoState
 
@@ -52,6 +64,13 @@ class SamplerBackend(Protocol):
     ``sample_uniform`` — unbiased neighbor pick with the same signature
     (the ``simple`` walk kind and degree-normalized baselines).
     Callers must mask walkers sitting on degree-0 vertices.
+
+    Backends may additionally implement the whole-walk capability
+    ``sample_walk(state, cfg, starts (B,) int32, key, params:
+    WalkParams) -> (B, length+1) int32 path`` (column 0 = starts,
+    terminated walkers pad -1 — the ``random_walk`` contract);
+    ``random_walk`` prefers it over the per-step scan for
+    deepwalk/ppr/simple when present.
     """
 
     name: str
@@ -107,6 +126,13 @@ class PallasBackend:
     digit-proportional acceptance with an in-kernel exact masked-ITS
     fallback; fp mode samples the decimal group via a frac-row ITS lane
     pass (DESIGN.md §7) — the distribution is exactly Eq. 2 in all modes.
+
+    Whole walks skip the per-step path entirely: ``sample_walk`` hands
+    the full ``BingoState`` tables to the persistent megakernel
+    (``kernels/walk_fused.py``, DESIGN.md §8), which runs all L steps in
+    one ``pallas_call`` with walker state resident in VMEM and only the
+    current walkers' rows DMA'd per step — no (B, C) gather ever
+    materializes in HBM.
     """
 
     name = "pallas"
@@ -127,13 +153,21 @@ class PallasBackend:
 
     def sample_uniform(self, state, cfg, u, key):
         from repro.kernels import ops
-        B = u.shape[0]
-        # All-ones bias rows collapse the hierarchy to a single group
-        # whose uniform member pick is the unbiased sample — the same
-        # fused kernel serves the ``simple`` walk kind.
-        nbr, deg = state.nbr[u], state.deg[u]
-        ones = jnp.ones((B, cfg.capacity), jnp.int32)
-        prob = jnp.ones((B, 1), jnp.float32)
-        alias = jnp.zeros((B, 1), jnp.int32)
-        uu = jax.random.uniform(key, (B, 3))
-        return ops.walk_sample(prob, alias, ones, nbr, deg, uu)
+        # Degree-based pick in-kernel (one lane compare against deg) —
+        # no dummy all-ones bias/alias rows, no prob/alias/bias gathers.
+        uu = jax.random.uniform(key, (u.shape[0], 1))
+        return ops.walk_sample_uniform(state.nbr[u], state.deg[u], uu)
+
+    def sample_walk(self, state, cfg, starts, key, params):
+        from repro.core import walks
+        if params.kind == "node2vec":
+            # Second-order rejection reads the previous hop's rows — stays
+            # on the per-step proposal path (DESIGN.md §8).
+            return walks.scan_walk(self, state, cfg, starts, key, params)
+        from repro.kernels import ops
+        stop = float(params.stop_prob) if params.kind == "ppr" else 0.0
+        return ops.walk_fused(
+            state.itable.prob, state.itable.alias, state.bias, state.nbr,
+            state.deg, state.frac if cfg.fp_bias else None, starts, key,
+            length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
+            uniform=params.kind == "simple")

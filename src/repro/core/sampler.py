@@ -167,6 +167,12 @@ class ReferenceBackend:
             (jax.random.uniform(key, (B,)) * dg).astype(jnp.int32), dg - 1)
         return state.nbr[u, j], j
 
+    def sample_walk(self, state, cfg, starts, key, params):
+        """Whole walk as the per-step ``lax.scan`` — the jnp reference
+        for the pallas megakernel (``core/walks.py:scan_walk``)."""
+        from repro.core import walks   # runtime import: walks imports us
+        return walks.scan_walk(self, state, cfg, starts, key, params)
+
 
 def transition_probs(state: BingoState, cfg: BingoConfig, u):
     """Exact per-slot transition probabilities (paper Eq. 2 ground truth).

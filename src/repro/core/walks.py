@@ -14,21 +14,26 @@ per-application policies:
 Walkers that terminate (or sit on degree-0 vertices) emit -1 and hold.
 All functions are jittable; ``state``/``cfg`` are closed over per-engine.
 
-Backend selection (DESIGN.md §7): every sample inside the ``lax.scan``
-step is drawn through the ``SamplerBackend`` named by ``cfg.backend`` —
-``"reference"`` (pure-jnp hierarchical sampler), ``"pallas"`` (row gather
-+ fused two-stage kernel), or ``"auto"`` (pallas on TPU, reference
-elsewhere; the default).  deepwalk/ppr run the biased step fully fused,
-``simple`` runs the backend's unbiased pick fully fused, and node2vec
-draws its KnightKing-style *proposals* through the backend while the
-history-factor rejection and the exact second-order ITS fallback stay in
-jnp (they need the previous-hop rows, which no gathered-row kernel sees).
-The pallas backend falls back to an in-kernel exact masked-ITS lane pass
-whenever the O(1) happy path cannot realize Eq. 2 alone — the decimal
-group in fp mode, and rejected digit-acceptance proposals for radix bases
-> 2 — so the sampled distribution is identical across backends in every
-mode.  Pass ``backend=`` explicitly to override ``cfg.backend`` for one
-call (benchmarks comparing the two paths do this).
+Backend selection (DESIGN.md §7): every sample is drawn through the
+``SamplerBackend`` named by ``cfg.backend`` — ``"reference"`` (pure-jnp
+hierarchical sampler), ``"pallas"`` (fused kernels), or ``"auto"``
+(pallas on TPU, reference elsewhere; the default).  deepwalk/ppr/simple
+dispatch *whole-walk* (DESIGN.md §8): ``random_walk`` hands the entire
+L-step batch to ``bk.sample_walk`` — on the pallas backend that is ONE
+persistent megakernel launch (``kernels/walk_fused.py``) with walker
+state resident in VMEM and per-step row DMAs double-buffered, instead of
+L ``lax.scan`` iterations each paying a kernel launch plus five
+HBM-materialized (B, C)/(B, K) gathers.  node2vec stays on the per-step
+``scan_walk`` path: it draws KnightKing-style *proposals* through the
+backend while the history-factor rejection and the exact second-order
+ITS fallback stay in jnp (they need the previous-hop rows, which no
+gathered-row kernel sees).  The pallas kernels fall back to an in-kernel
+exact masked-ITS lane pass whenever the O(1) happy path cannot realize
+Eq. 2 alone — the decimal group in fp mode, and rejected
+digit-acceptance proposals for radix bases > 2 — so the sampled
+distribution is identical across backends in every mode.  Pass
+``backend=`` (and/or ``whole_walk=False``) explicitly to override
+``cfg.backend`` for one call (benchmarks comparing the paths do this).
 """
 
 from __future__ import annotations
@@ -43,7 +48,8 @@ from repro.core.backend import get_backend
 from repro.core.dyngraph import BingoConfig, BingoState
 from repro.core.sampler import _its_rows
 
-__all__ = ["WalkParams", "random_walk", "deepwalk", "node2vec", "ppr"]
+__all__ = ["WalkParams", "random_walk", "scan_walk", "deepwalk",
+           "node2vec", "ppr", "make_walker"]
 
 _N2V_TRIALS = 16
 
@@ -126,18 +132,20 @@ def _n2v_accept(state, cfg, prev, cur, has_prev, key, params, bk=None):
     return jnp.where(ok, nxt, nxt_fb)
 
 
-def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
-                params: WalkParams, backend: Optional[str] = None):
-    """Run a batch of walks; returns ``(B, length + 1)`` int32 paths.
+def scan_walk(bk, state: BingoState, cfg: BingoConfig, starts, key,
+              params: WalkParams):
+    """Per-step walk: one ``lax.scan`` drawing through ``bk`` each step.
 
-    Column 0 holds the start vertices; terminated walkers pad with -1.
-    Samples are drawn through the ``SamplerBackend`` named by
-    ``backend`` (default: ``cfg.backend``) — see the module docstring
-    for how each walk kind maps onto the backend interface.
+    The reference whole-walk implementation (every step gathers rows,
+    launches one backend sample, and round-trips walker state through
+    XLA) and the only path for node2vec.  Production deepwalk/ppr/simple
+    normally go whole-walk instead — ``random_walk`` dispatches to
+    ``bk.sample_walk`` (the pallas megakernel, DESIGN.md §8) when the
+    backend has it; benchmarks call ``scan_walk`` directly to measure
+    the per-step path side by side.
     """
     B = starts.shape[0]
     alive0 = state.deg[starts] > 0
-    bk = get_backend(cfg.backend if backend is None else backend)
 
     def step(carry, key):
         cur, prev, has_prev, alive = carry
@@ -165,6 +173,35 @@ def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
         [starts[:, None], jnp.swapaxes(path, 0, 1)], axis=1)
 
 
+def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
+                params: WalkParams, backend: Optional[str] = None,
+                whole_walk: Optional[bool] = None):
+    """Run a batch of walks; returns ``(B, length + 1)`` int32 paths.
+
+    Column 0 holds the start vertices; terminated walkers pad with -1.
+    Samples are drawn through the ``SamplerBackend`` named by
+    ``backend`` (default: ``cfg.backend``) — see the module docstring
+    for how each walk kind maps onto the backend interface.
+
+    Dispatch: deepwalk/ppr/simple run *whole-walk* through
+    ``bk.sample_walk`` when the backend defines it — on the pallas
+    backend that is one persistent megakernel launch for all L steps
+    (``kernels/walk_fused.py``, DESIGN.md §8) instead of L per-step
+    launches.  node2vec always takes the per-step ``scan_walk`` path
+    (its Eq. 1 rejection needs the previous hop's rows).  Force with
+    ``whole_walk=True`` (raises if the backend can't) or pin the
+    per-step path with ``whole_walk=False`` (benchmark comparisons).
+    """
+    bk = get_backend(cfg.backend if backend is None else backend)
+    can_whole = hasattr(bk, "sample_walk")
+    if whole_walk is True and not can_whole:
+        raise ValueError(
+            f"backend {bk.name!r} has no sample_walk whole-walk support")
+    if whole_walk is not False and can_whole and params.kind != "node2vec":
+        return bk.sample_walk(state, cfg, starts, key, params)
+    return scan_walk(bk, state, cfg, starts, key, params)
+
+
 def deepwalk(state, cfg, starts, key, length: int = 80,
              backend: Optional[str] = None):
     return random_walk(state, cfg, starts, key,
@@ -188,9 +225,18 @@ def ppr(state, cfg, starts, key, max_length: int = 400,
 
 
 def make_walker(state: BingoState, cfg: BingoConfig, params: WalkParams,
-                backend: Optional[str] = None):
-    """Jitted walk closure (cfg/params/backend static) for benchmarks."""
-    @functools.partial(jax.jit, static_argnums=())
+                backend: Optional[str] = None,
+                whole_walk: Optional[bool] = None):
+    """Jitted walk closure (cfg/params/backend static) for benchmarks.
+
+    Returns ``run(st, starts, key) -> (st, path)``: the state is donated
+    (``donate_argnums=0``) and threaded through unchanged, so XLA aliases
+    the full ``BingoState`` buffers input→output and repeated walk calls
+    never copy them — callers rebind ``st, path = run(st, starts, key)``
+    (``benchmarks/common.py:walk_rate``).
+    """
+    @functools.partial(jax.jit, donate_argnums=0)
     def run(st, starts, key):
-        return random_walk(st, cfg, starts, key, params, backend=backend)
+        return st, random_walk(st, cfg, starts, key, params,
+                               backend=backend, whole_walk=whole_walk)
     return run

@@ -7,8 +7,12 @@ Each kernel ships three files' worth of surface:
   * ``ref.py``     — pure-jnp oracles the tests ``assert_allclose`` against.
 
 Kernels:
-  * ``walk_sample``     — fused hierarchical BINGO sampling (paper §4.1's
-    O(1) sampling claim, the engine's hottest loop);
+  * ``walk_fused``      — persistent whole-walk megakernel: the entire
+    L-step walk in ONE launch, tables HBM-resident, per-step row DMAs
+    double-buffered into VMEM (DESIGN.md §8 — the production walk path);
+  * ``walk_sample``     — fused hierarchical BINGO sampling, one step per
+    launch (paper §4.1's O(1) sampling claim; node2vec proposals and the
+    distributed per-step exchange cell still run through it);
   * ``alias_build``     — batched Vose alias-table construction over the
     K-entry inter-group rows (paper §4.2's O(K) update claim);
   * ``radix_hist``      — Eq. 4 radix histograms W(p_k) for group rebuild;
@@ -18,6 +22,7 @@ Kernels:
 """
 
 from repro.kernels.ops import (alias_build, flash_attention, radix_hist,
-                               walk_sample)
+                               walk_fused, walk_sample, walk_sample_uniform)
 
-__all__ = ["walk_sample", "alias_build", "radix_hist", "flash_attention"]
+__all__ = ["walk_fused", "walk_sample", "walk_sample_uniform",
+           "alias_build", "radix_hist", "flash_attention"]

@@ -9,15 +9,18 @@ dry-run/roofline path uses it so HLO cost analysis sees real FLOPs.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.alias_build import alias_build_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
-from repro.kernels.walk_sample import walk_sample_pallas
+from repro.kernels.walk_fused import NUM_UNIFORMS, walk_fused_pallas
+from repro.kernels.walk_sample import (walk_sample_pallas,
+                                       walk_sample_uniform_pallas)
 
-__all__ = ["walk_sample", "alias_build", "radix_hist", "flash_attention",
-           "on_tpu"]
+__all__ = ["walk_sample", "walk_sample_uniform", "walk_fused",
+           "alias_build", "radix_hist", "flash_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -49,6 +52,43 @@ def walk_sample(prob, alias, bias, nbr, deg, u, frac=None, *,
                                     frac=frac, base_log2=base_log2)
     return walk_sample_pallas(prob, alias, bias, nbr, deg, u, frac,
                               base_log2=base_log2, interpret=not on_tpu())
+
+
+def walk_sample_uniform(nbr, deg, u, *, force_ref: bool = False):
+    """Unbiased degree pick on gathered rows — no prob/alias/bias rows."""
+    if force_ref:
+        return _ref.walk_sample_uniform_ref(nbr, deg, u[:, 0])
+    return walk_sample_uniform_pallas(nbr, deg, u, interpret=not on_tpu())
+
+
+def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, *,
+               length: int, base_log2: int = 1, stop_prob: float = 0.0,
+               uniform: bool = False, force_ref: bool = False,
+               block_b: int = 256):
+    """Whole-walk entry: one resident megakernel launch for all L steps.
+
+    Tables are the full ``BingoState`` arrays (see
+    ``kernels/walk_fused.py``).  On TPU, uniforms come from the in-kernel
+    PRNG seeded from ``key`` (no (L, B, 6) HBM buffer at production
+    scale); elsewhere (interpret mode has no TPU PRNG lowering) — and on
+    the ``force_ref`` roofline path, where HLO cost analysis needs real
+    FLOPs — they are precomputed from the same key, so a given key is
+    replayable on every path.  Returns the (B, length+1) int32 path.
+    """
+    k_seed, k_u = jax.random.split(key)
+    seed = jax.random.randint(k_seed, (1,), 0, jnp.iinfo(jnp.int32).max,
+                              dtype=jnp.int32)
+    u = None
+    if force_ref or not on_tpu():
+        u = jax.random.uniform(k_u, (length, starts.shape[0], NUM_UNIFORMS))
+    if force_ref:
+        return _ref.walk_fused_ref(prob, alias, bias, nbr, deg, frac,
+                                   starts, u, base_log2=base_log2,
+                                   stop_prob=stop_prob, uniform=uniform)
+    return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
+                             seed, u, length=length, base_log2=base_log2,
+                             stop_prob=stop_prob, uniform=uniform,
+                             block_b=block_b, interpret=not on_tpu())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

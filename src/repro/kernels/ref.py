@@ -5,8 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["walk_sample_ref", "alias_build_ref", "radix_hist_ref",
-           "attention_ref"]
+__all__ = ["walk_sample_ref", "walk_sample_uniform_ref", "walk_fused_ref",
+           "alias_build_ref", "radix_hist_ref", "attention_ref"]
 
 
 def radix_hist_ref(bias, deg, num_k: int):
@@ -100,6 +100,65 @@ def walk_sample_ref(prob, alias, bias, nbr, deg, u0, u1, u2,
     nxt = jnp.where(ok, jnp.take_along_axis(
         nbr, jnp.maximum(slot, 0)[:, None], axis=-1)[:, 0], -1)
     return nxt, slot
+
+
+def walk_sample_uniform_ref(nbr, deg, u0):
+    """Degree-based unbiased pick: slot = ⌊u0·deg⌋ (mirrors
+    walk_sample.py:uniform_pick).  ``nbr`` (B, C) int32, ``deg`` (B,)
+    int32, ``u0`` (B,) uniforms.  Returns (nxt, slot); -1 where deg == 0.
+    """
+    slot = jnp.minimum((u0 * deg.astype(jnp.float32)).astype(jnp.int32),
+                       deg - 1)
+    ok = deg > 0
+    nxt = jnp.take_along_axis(nbr, jnp.maximum(slot, 0)[:, None],
+                              axis=-1)[:, 0]
+    return jnp.where(ok, nxt, -1), jnp.where(ok, slot, -1)
+
+
+def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u, *,
+                   base_log2: int = 1, stop_prob: float = 0.0,
+                   uniform: bool = False):
+    """Whole-walk oracle: the L-step scan under *fed* uniforms.
+
+    The pure-jnp ground truth for ``kernels/walk_fused.py`` — same
+    (L, B, 6) uniform columns (alias bucket, alias coin, member pick,
+    acceptance coin, ITS position, PPR stop coin), same per-step alive
+    semantics as ``core/walks.py:scan_walk``, with each step's sample
+    drawn by ``walk_sample_ref`` (or the degree pick for
+    ``uniform=True``) on rows gathered in HBM.  Bit-exact against the
+    megakernel in interpret mode; also the roofline/cost-analysis stand-
+    in (``ops.walk_fused(force_ref=True)``) since Pallas bodies are
+    opaque to HLO cost analysis.  Returns the (B, L+1) int32 path.
+    """
+    if u.shape[-1] < 6:
+        raise ValueError(
+            f"fed uniforms must be (L, B, 6); got {u.shape}")
+    V = nbr.shape[0]
+    B = starts.shape[0]
+
+    def step(carry, ut):
+        cur, alive = carry
+        safe = jnp.clip(cur, 0, V - 1)
+        d = deg[safe]
+        if uniform:
+            nxt, _ = walk_sample_uniform_ref(nbr[safe], d, ut[:, 2])
+        else:
+            fr = frac[safe] if frac is not None else None
+            nxt, _ = walk_sample_ref(prob[safe], alias[safe], bias[safe],
+                                     nbr[safe], d, ut[:, 0], ut[:, 1],
+                                     ut[:, 2], ut[:, 3], ut[:, 4],
+                                     frac=fr, base_log2=base_log2)
+        alive = alive & (d > 0)
+        if stop_prob > 0.0:
+            alive = alive & (ut[:, 5] >= jnp.float32(stop_prob))
+        out = jnp.where(alive, nxt, -1)
+        new_alive = alive & (nxt >= 0)
+        return (jnp.where(new_alive, nxt, cur), new_alive), out
+
+    (_, _), path = jax.lax.scan(
+        step, (starts, jnp.ones((B,), bool)), u)
+    return jnp.concatenate([starts[:, None], jnp.swapaxes(path, 0, 1)],
+                           axis=1)
 
 
 def attention_ref(q, k, v, *, causal=True, window=0, scale=None,

@@ -1,0 +1,261 @@
+"""Persistent whole-walk megakernel: the L-step loop lives in VMEM.
+
+The per-step production path (``kernels/walk_sample.py``) still pays
+per-step overhead the kernel cannot see: every step of the
+``random_walk`` scan materializes five gathered (B, C)/(B, K) row arrays
+in HBM, launches one ``pallas_call``, and round-trips walker state
+through XLA — an 80-step DeepWalk is 80 launches and ~80×5 HBM-resident
+gathers for work that is per-walker *sequential*.  This kernel is the
+jax_pallas analogue of ThunderRW's step interleaving and FlexiWalker's
+fused dynamic-walk kernels: one resident ``pallas_call`` per walk batch
+that owns the whole step loop (DESIGN.md §8).
+
+Structure per walker tile of Bt:
+
+  * the full BINGO tables (itable prob/alias, bias, nbr, frac, deg) stay
+    HBM-resident operands (``memory_space=ANY``) — nothing (B, C)-shaped
+    ever materializes in HBM;
+  * per step, only the *current* walkers' rows are DMA'd into VMEM
+    scratch via ``pltpu.make_async_copy``, double-buffered over two slots
+    so the step-(t+1) gather (issued the moment step t's sample lands)
+    overlaps step t's path write, alive bookkeeping, and uniform draw;
+  * walker state (cur | alive) lives in VMEM scratch, mirrored to SMEM
+    once per step (one (Bt, 2) DMA) because DMA descriptors need scalar
+    indices; dead walkers (PPR termination, dead ends) skip their row
+    gathers entirely via ``pl.when`` on the SMEM alive flag;
+  * the sample itself is the exact in-register two-stage pass shared
+    with the per-step kernel (``walk_sample.sample_rows``): stage (i)
+    alias one-hot, stage (ii) masked lane cumsum, including the fp
+    decimal group and base > 2 digit-acceptance lanes — or the
+    degree-based ``uniform_pick`` for the ``simple`` kind;
+  * uniforms come from the in-kernel TPU PRNG (``pltpu.prng_random_bits``
+    seeded per tile from a fed scalar — replayable: same seed, same
+    walk), or from a fed (L, B, 6) array where the TPU PRNG is
+    unavailable (interpret mode) or a test wants to pin exact streams;
+  * the (Bt, L+1) path tile is written to HBM once, column by column.
+
+Uniform column layout (fed or generated, 6 lanes per walker per step):
+``u0`` alias bucket, ``u1`` alias coin, ``u2`` member pick, ``u3``
+acceptance coin, ``u4`` ITS position, ``u5`` PPR stop coin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.walk_sample import sample_rows, uniform_pick
+
+__all__ = ["walk_fused_pallas", "NUM_UNIFORMS"]
+
+NUM_UNIFORMS = 6
+
+
+def _uniforms_from_bits(bits):
+    """uint32 random bits -> float32 uniforms in [0, 1) (24-bit mantissa)."""
+    top24 = jax.lax.shift_right_logical(pltpu.bitcast(bits, jnp.uint32), 8)
+    return top24.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
+            block_b, num_verts, *refs):
+    Bt = block_b
+    # --- unpack refs: inputs, outputs, scratch (order fixed by pallas_call)
+    refs = list(refs)
+    seed_ref = refs.pop(0)                     # (1,) SMEM
+    starts_ref = refs.pop(0)                   # (Bt, 1) VMEM
+    u_ref = refs.pop(0) if has_u else None     # (L, Bt, 6) VMEM
+    if uniform:
+        nbr_hbm, deg_hbm = refs.pop(0), refs.pop(0)
+        tabs = (nbr_hbm, deg_hbm)
+    else:
+        prob_hbm, alias_hbm = refs.pop(0), refs.pop(0)
+        bias_hbm, nbr_hbm, deg_hbm = refs.pop(0), refs.pop(0), refs.pop(0)
+        tabs = (prob_hbm, alias_hbm, bias_hbm, nbr_hbm, deg_hbm)
+        if has_frac:
+            frac_hbm = refs.pop(0)
+            tabs += (frac_hbm,)
+    out_ref = refs.pop(0)                      # (Bt, L+1) VMEM
+    bufs = tuple(refs.pop(0) for _ in tabs)    # (2, Bt, ·) VMEM each
+    state_v, state_s, gsem, ssem = refs        # VMEM/SMEM (Bt,2), DMA sems
+
+    if not has_u:
+        pltpu.prng_seed(seed_ref[0] + pl.program_id(0))
+
+    def row_copies(slot, b, v):
+        """The DMA set staging vertex ``v``'s rows into buffer ``slot``."""
+        return [pltpu.make_async_copy(tab.at[v], buf.at[slot, b],
+                                      gsem.at[slot])
+                for tab, buf in zip(tabs, bufs)]
+
+    def gather(slot, action):
+        """Start/wait the row DMAs for every *alive* walker in the tile.
+
+        ``pl.when`` on the SMEM alive flag is the PPR early-termination
+        win: dead walkers stop gathering (and must skip the wait too —
+        the predicate is stable between the paired loops because
+        ``state_s`` is only rewritten after the next ``start``)."""
+        def body(b, _):
+            @pl.when(state_s[b, 1] != 0)
+            def _():
+                v = jnp.clip(state_s[b, 0], 0, num_verts - 1)
+                for dma in row_copies(slot, b, v):
+                    getattr(dma, action)()
+            return 0
+        jax.lax.fori_loop(0, Bt, body, 0)
+
+    def sync_state():
+        """Mirror (cur | alive) to SMEM — DMA indices must be scalars."""
+        cp = pltpu.make_async_copy(state_v, state_s, ssem)
+        cp.start()
+        cp.wait()
+
+    # --- prologue: col 0 = starts, everyone alive, stage step-0 rows
+    starts = starts_ref[...]
+    out_ref[:, 0:1] = starts
+    state_v[:, 0:1] = starts
+    state_v[:, 1:2] = jnp.ones((Bt, 1), jnp.int32)
+    sync_state()
+    gather(0, "start")
+
+    def step(t, _):
+        slot = jax.lax.rem(t, 2)
+        gather(slot, "wait")
+        cur = state_v[:, 0:1]
+        alive = state_v[:, 1:2] != 0
+        if has_u:
+            u = u_ref[t]                                     # (Bt, 6)
+        else:
+            u = _uniforms_from_bits(
+                pltpu.prng_random_bits((Bt, NUM_UNIFORMS)))
+        if uniform:
+            nbr, deg = bufs[0][slot], bufs[1][slot]
+            nxt, _slt, ok = uniform_pick(nbr, deg, u[:, 2:3])
+        else:
+            frac = bufs[5][slot] if has_frac else None
+            nxt, _slt, ok = sample_rows(
+                bufs[0][slot], bufs[1][slot], bufs[2][slot], bufs[3][slot],
+                bufs[4][slot], u, frac, base_log2=base_log2)
+            deg = bufs[4][slot]
+        # scan-step parity (core/walks.py): the deg check covers both this
+        # step's deg[cur] > 0 and the previous step's deg[nxt] > 0.
+        alive = alive & (deg > 0)
+        if stop_prob > 0.0:
+            alive = alive & (u[:, 5:6] >= jnp.float32(stop_prob))
+        # column t+1 of the path tile via a lane-mask select — a dynamic
+        # lane-dim store is the one construct Mosaic may refuse; the
+        # (Bt, L+1) read-modify-write is a single VPU pass over ~100 KB.
+        colL = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
+        out_ref[...] = jnp.where(colL == t + 1,
+                                 jnp.where(alive, nxt, -1), out_ref[...])
+        # nxt >= 0 matches the scan reference's nxt_alive: with a
+        # well-formed state it is implied by ok, but adjacency rows that
+        # mark hops -1 on purpose (walk_cell's shard-local view truncates
+        # out-of-shard neighbors that way) must also terminate here.
+        new_alive = alive & ok & (nxt >= 0)
+        state_v[:, 0:1] = jnp.where(new_alive, nxt, cur)
+        state_v[:, 1:2] = new_alive.astype(jnp.int32)
+
+        # kick off step t+1's gathers immediately — they overlap nothing
+        # upstream (the next vertex is data-dependent) but everything
+        # downstream: the loop epilogue, next wait setup, and (PRNG mode)
+        # the next uniform draw all run under the in-flight DMAs.
+        @pl.when(t + 1 < length)
+        def _():
+            sync_state()
+            gather(jax.lax.rem(t + 1, 2), "start")
+        return 0
+
+    jax.lax.fori_loop(0, length, step, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("length", "base_log2", "stop_prob", "uniform",
+                     "block_b", "interpret"))
+def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
+                      u=None, *, length: int, base_log2: int = 1,
+                      stop_prob: float = 0.0, uniform: bool = False,
+                      block_b: int = 256, interpret: bool = False):
+    """Whole-walk fused BINGO walk: one ``pallas_call`` for all L steps.
+
+    ``prob``/``alias`` (V, Kin), ``bias``/``nbr`` (V, C) int32, ``deg``
+    (V,) int32 and optionally ``frac`` (V, C) float32 are the *full*
+    ``BingoState`` tables, kept HBM-resident; ``starts`` (B,) int32;
+    ``seed`` (1,) int32 feeds the per-tile in-kernel PRNG.  Passing
+    ``u`` (L, B, 6) float32 overrides the PRNG with fed uniforms
+    (required in interpret mode, where the TPU PRNG has no lowering;
+    also how tests pin exact streams against ``ref.walk_fused_ref``).
+    ``uniform=True`` runs the degree-based unbiased pick (the ``simple``
+    kind) and ignores prob/alias/bias/frac entirely.
+
+    Returns the (B, length+1) int32 path; column 0 is ``starts``,
+    terminated walkers pad with -1 (same contract as
+    ``core/walks.py:random_walk``).
+    """
+    if u is not None and u.shape[-1] < NUM_UNIFORMS:
+        # Strict: the stop coin lives in column 5, and JAX's clamped
+        # out-of-bounds gather would otherwise silently alias it onto
+        # the ITS column for narrower arrays.
+        raise ValueError(
+            f"fed uniforms must be (L, B, {NUM_UNIFORMS}); got {u.shape}")
+    B = starts.shape[0]
+    V, C = nbr.shape
+    has_frac = frac is not None and not uniform
+    has_u = u is not None
+    block_b = min(block_b, B)
+    grid = (pl.cdiv(B, block_b),)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),              # seed
+        pl.BlockSpec((block_b, 1), lambda i: (i, 0)),       # starts
+    ]
+    args = [seed, starts[:, None]]
+    if has_u:
+        in_specs.append(
+            pl.BlockSpec((length, block_b, NUM_UNIFORMS),
+                         lambda i: (0, i, 0)))
+        args.append(u)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    deg2 = deg[:, None]
+    if uniform:
+        tab_args = [nbr, deg2]
+        buf_shapes = [(2, block_b, C), (2, block_b, 1)]
+        buf_dtypes = [jnp.int32, jnp.int32]
+    else:
+        Kin = prob.shape[-1]
+        tab_args = [prob, alias, bias, nbr, deg2]
+        buf_shapes = [(2, block_b, Kin), (2, block_b, Kin),
+                      (2, block_b, C), (2, block_b, C), (2, block_b, 1)]
+        buf_dtypes = [jnp.float32, jnp.int32, jnp.int32, jnp.int32,
+                      jnp.int32]
+        if has_frac:
+            tab_args.append(frac)
+            buf_shapes.append((2, block_b, C))
+            buf_dtypes.append(jnp.float32)
+    in_specs += [any_spec] * len(tab_args)
+    args += tab_args
+
+    scratch = [pltpu.VMEM(s, d) for s, d in zip(buf_shapes, buf_dtypes)]
+    scratch += [
+        pltpu.VMEM((block_b, 2), jnp.int32),        # state_v: cur | alive
+        pltpu.SMEM((block_b, 2), jnp.int32),        # state_s: DMA indices
+        pltpu.SemaphoreType.DMA((2,)),              # row gathers, per slot
+        pltpu.SemaphoreType.DMA(()),                # state mirror copy
+    ]
+    kern = functools.partial(_kernel, length, base_log2, float(stop_prob),
+                             uniform, has_frac, has_u, block_b, V)
+    path = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, length + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, length + 1), jnp.int32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*args)
+    return path

@@ -36,6 +36,13 @@ bias/neighbor(/frac) rows.  VMEM ≈ Bt·(2K·4 + 3C·4 + 24) B; Bt=256,
 C=1024, K=16 is ~3.2 MB.  All uniforms are fed as inputs so the kernel is
 replayable: 3 per walker for the base-2 integer path, 5 (acceptance coin +
 ITS position) for the extended paths.
+
+This is the *per-step* kernel: one launch per walk step, rows gathered in
+HBM by the caller.  Whole walks go through the persistent megakernel in
+``kernels/walk_fused.py`` instead (DESIGN.md §8), which runs the L-step
+loop in VMEM and reuses ``sample_rows``/``uniform_pick`` below as its
+in-register sampling stage; this kernel remains the path for node2vec
+proposals and the distributed per-step exchange cell.
 """
 
 from __future__ import annotations
@@ -46,7 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["walk_sample_pallas"]
+__all__ = ["walk_sample_pallas", "walk_sample_uniform_pallas",
+           "sample_rows", "uniform_pick"]
 
 
 def _its_pick(w, x01):
@@ -62,20 +70,22 @@ def _its_pick(w, x01):
     return jnp.minimum(idx, w.shape[-1] - 1)
 
 
-def _kernel(base_log2, has_frac, prob_ref, alias_ref, bias_ref, nbr_ref,
-            deg_ref, u_ref, *rest):
-    if has_frac:
-        frac_ref, nxt_ref, slot_ref = rest
-    else:
-        nxt_ref, slot_ref = rest
-    prob = prob_ref[...]                                  # (Bt, Kin)
-    alias = alias_ref[...]                                # (Bt, Kin)
-    bias = bias_ref[...]                                  # (Bt, C)
-    nbr = nbr_ref[...]                                    # (Bt, C)
-    deg = deg_ref[...]                                    # (Bt, 1)
-    u = u_ref[...]                                        # (Bt, 3|5)
+def sample_rows(prob, alias, bias, nbr, deg, u, frac=None, *,
+                base_log2: int = 1):
+    """In-register two-stage BINGO sample on VMEM-resident rows.
+
+    The shared kernel body: called on a (Bt, ·) walker tile by both the
+    per-step kernel below and the whole-walk megakernel
+    (``kernels/walk_fused.py``), which keeps the tile resident and feeds
+    freshly DMA'd rows every step.  All arguments are *values* (already
+    loaded from refs): prob/alias (Bt, Kin), bias/nbr (Bt, C) int32,
+    deg (Bt, 1) int32, u (Bt, ≥3|≥5) uniforms, frac (Bt, C) float32 in
+    fp mode.  Returns ``(nxt, slot, ok)`` each (Bt, 1); nxt/slot are -1
+    where ``ok`` is False (empty sampling space).
+    """
     Bt, Kin = prob.shape
     C = bias.shape[-1]
+    has_frac = frac is not None
     u0, u1, u2 = u[:, 0:1], u[:, 1:2], u[:, 2:3]          # (Bt, 1)
 
     # stage (i): alias pick over the Kin-lane row, gather-free one-hot
@@ -123,14 +133,51 @@ def _kernel(base_log2, has_frac, prob_ref, alias_ref, bias_ref, nbr_ref,
     if has_frac:
         # decimal group (§4.3): exact ITS over the gathered frac row
         u4 = u[:, 4:5]
-        wf = jnp.where(valid, frac_ref[...], 0.0)
+        wf = jnp.where(valid, frac, 0.0)
         slot_dec = _its_pick(wf, u4)
         slot = jnp.where(is_dec, slot_dec, slot)
         ok = jnp.where(is_dec, wf.sum(-1, keepdims=True) > 0, ok)
 
     nxt = jnp.sum(jnp.where(colC == slot, nbr, 0), -1, keepdims=True)
-    slot_ref[...] = jnp.where(ok, slot, -1)
-    nxt_ref[...] = jnp.where(ok, nxt, -1)
+    return (jnp.where(ok, nxt, -1), jnp.where(ok, slot, -1), ok)
+
+
+def uniform_pick(nbr, deg, u2):
+    """Degree-based unbiased pick: slot = ⌊u2·deg⌋ in one lane compare.
+
+    ``nbr`` (Bt, C) int32, ``deg`` (Bt, 1) int32, ``u2`` (Bt, 1) in
+    [0, 1).  No bias/alias rows at all — the ``simple`` walk kind and
+    degree-normalized baselines sample straight off the adjacency row.
+    Returns ``(nxt, slot, ok)`` each (Bt, 1); -1 where deg == 0.
+    """
+    Bt, C = nbr.shape
+    colC = jax.lax.broadcasted_iota(jnp.int32, (Bt, C), 1)
+    slot = jnp.minimum((u2 * deg.astype(jnp.float32)).astype(jnp.int32),
+                       deg - 1)
+    nxt = jnp.sum(jnp.where(colC == slot, nbr, 0), -1, keepdims=True)
+    ok = deg > 0
+    return (jnp.where(ok, nxt, -1), jnp.where(ok, slot, -1), ok)
+
+
+def _kernel(base_log2, has_frac, prob_ref, alias_ref, bias_ref, nbr_ref,
+            deg_ref, u_ref, *rest):
+    if has_frac:
+        frac_ref, nxt_ref, slot_ref = rest
+        frac = frac_ref[...]
+    else:
+        nxt_ref, slot_ref = rest
+        frac = None
+    nxt, slot, _ = sample_rows(prob_ref[...], alias_ref[...], bias_ref[...],
+                               nbr_ref[...], deg_ref[...], u_ref[...], frac,
+                               base_log2=base_log2)
+    slot_ref[...] = slot
+    nxt_ref[...] = nxt
+
+
+def _uniform_kernel(nbr_ref, deg_ref, u_ref, nxt_ref, slot_ref):
+    nxt, slot, _ = uniform_pick(nbr_ref[...], deg_ref[...], u_ref[:, 0:1])
+    slot_ref[...] = slot
+    nxt_ref[...] = nxt
 
 
 @functools.partial(jax.jit,
@@ -182,4 +229,39 @@ def walk_sample_pallas(prob, alias, bias, nbr, deg, u, frac=None, *,
         ],
         interpret=interpret,
     )(*args)
+    return nxt[:, 0], slot[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def walk_sample_uniform_pallas(nbr, deg, u, *, block_b: int = 256,
+                               interpret: bool = False):
+    """Fused unbiased neighbor pick on gathered adjacency rows.
+
+    ``nbr`` (B, C) int32, ``deg`` (B,) int32, ``u`` (B, 1) uniforms.
+    The degree-based pick needs no prob/alias/bias rows — stage (i) and
+    the membership cumsum collapse to one lane compare against ``deg``
+    (``uniform_pick``), so the ``simple`` walk kind skips 3 of the 5
+    row gathers entirely.  Returns (nxt (B,) i32, slot (B,) i32).
+    """
+    B, C = nbr.shape
+    block_b = min(block_b, B)
+    grid = (pl.cdiv(B, block_b),)
+    nxt, slot = pl.pallas_call(
+        _uniform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbr, deg[:, None], u[:, :1])
     return nxt[:, 0], slot[:, 0]

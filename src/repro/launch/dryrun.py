@@ -127,6 +127,7 @@ def main():
                 for a, cs in CELLS.items() for c in cs if not c["skip"]
                 if args.arch_filter in a]
         todo.append(("bingo-walk", "walk_step"))
+        todo.append(("bingo-walk", "walk_whole"))
     else:
         todo = [(args.arch, args.shape)]
 

@@ -1,5 +1,5 @@
-"""The paper's own workload as a dry-run cell: one distributed walk step
-plus one batched-update step on the production mesh.
+"""The paper's own workload as a dry-run cell: one distributed walk step,
+one whole-walk batch, plus one batched-update step on the production mesh.
 
 Distribution = paper §9.1: the whole BINGO sampling space is 1-D
 vertex-partitioned over data(×pod); the walk step samples locally with the
@@ -8,7 +8,13 @@ insert→delete→rebuild pipeline on a 100K-update batch.  Walker routing
 (where next hops leave the shard) is the gather/all-to-all traffic the
 roofline's collective term captures.
 
-Shapes: ``walk_step`` — one synchronous step of all walkers;
+Shapes: ``walk_step``  — one synchronous step of all walkers (sample +
+        all_to_all exchange per step: the paper's synchronous engine);
+        ``walk_whole`` — the whole-walk entry (DESIGN.md §8): every shard
+        runs its resident walkers' full L-step walks locally through
+        ``backend.sample_walk`` — one persistent megakernel launch on
+        TPU — with no per-step exchange (the asynchronous-engine mode:
+        walks stay shard-local, paths are gathered once at the end);
         ``update_step`` — one batched graph update (100K updates).
 """
 
@@ -125,6 +131,66 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
             out_shardings=NamedSharding(mesh, P(dp)),
             donate_argnums=(),
             meta={"tokens": W, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    if shape_name == "walk_whole":
+        from repro.core.walks import WalkParams
+        W = wcfg.walkers
+        L = wcfg.walk_length
+        num_shards = 1
+        for a in dp:
+            num_shards *= mesh.shape[a]
+        shard_size = wcfg.num_vertices // num_shards
+        sampler = get_backend(bcfg.backend)
+        wparams = WalkParams(kind="deepwalk", length=L)
+
+        # Whole-walk entry (DESIGN.md §8): each shard walks its resident
+        # walkers for the full L steps locally — on TPU this is ONE
+        # megakernel launch per shard instead of L launches + L
+        # all_to_alls.  The adjacency stores *global* neighbor ids, so
+        # the shard first rewrites its nbr table into shard-local rows,
+        # truncating out-of-shard neighbors to -1: a walker whose next
+        # hop leaves the shard terminates there (the asynchronous-engine
+        # trade — no exchange traffic, shard-local sub-walks; a real
+        # deployment would enqueue the walker for its new owner and
+        # resume it next round).  Paths are emitted in one
+        # (W/shards, L+1) write.
+        def walk_whole_local(state, walkers, seed):
+            sidx = jax.lax.axis_index(dp[0])
+            for a in dp[1:]:
+                sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+            key = jax.random.fold_in(jax.random.key(seed[0]), sidx)
+            lo = sidx * shard_size
+            owned = (state.nbr >= lo) & (state.nbr < lo + shard_size)
+            state = state._replace(
+                nbr=jnp.where(owned, state.nbr - lo, -1))
+            local = jnp.where(walkers >= 0,
+                              walkers - lo, 0)
+            return sampler.sample_walk(
+                state, bcfg, jnp.clip(local, 0, shard_size - 1), key,
+                wparams)
+
+        from jax.experimental.shard_map import shard_map
+        walk_whole = shard_map(
+            walk_whole_local, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(dp), sspecs,
+                                   is_leaf=lambda s: isinstance(s, P)),
+                      P(dp), P()),
+            out_specs=P(dp), check_rep=False)
+
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=walk_whole,
+            args_sds=(state_sds, jax.ShapeDtypeStruct((W,), jnp.int32),
+                      jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       sspecs,
+                                       is_leaf=lambda s: isinstance(s, P)),
+                          NamedSharding(mesh, P(dp)),
+                          NamedSharding(mesh, P())),
+            out_shardings=NamedSharding(mesh, P(dp)),
+            donate_argnums=(),
+            meta={"tokens": W * L, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
         )
 
     if shape_name == "update_step":

@@ -167,6 +167,91 @@ def test_node2vec_proposals_through_backend(backend):
     assert tv_distance(got, want) < 0.03, backend
 
 
+def _bounce_graph(fp=False):
+    """Hub graph + weight-1 return edges: every leaf bounces straight
+    back to the hub, so an L-step walk samples the hub's transition
+    distribution at every even step — per-step frequencies through the
+    whole-walk path are pinned against Eq. 2, not just the first hop."""
+    src, dst, w, V = _hub_graph()
+    src2 = np.concatenate([src, dst])
+    dst2 = np.concatenate([dst, src])
+    w2 = np.concatenate([w, np.ones_like(w)])
+    if fp:
+        w2 = w2.astype(np.float32) + 0.37
+    return src2, dst2, w2, V
+
+
+def _chi_square(counts, probs):
+    """Pearson statistic of observed hub-transition counts vs Eq. 2."""
+    exp = probs * counts.sum()
+    mask = exp > 0
+    assert counts[~mask].sum() == 0, "mass on a zero-probability vertex"
+    return float(((counts[mask] - exp[mask]) ** 2 / exp[mask]).sum())
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("base_log2,fp", [(1, False), (2, False),
+                                          (1, True), (2, True)])
+def test_whole_walk_transitions(backend, base_log2, fp):
+    """Whole-walk equivalence: same key ⇒ the fused path's *per-step*
+    transition frequencies out of the hub match ``transition_probs``
+    (chi-square) across all four group types (the hub bias row spans
+    DENSE/ONE/SPARSE/REGULAR), fp mode, and bases 2/4.  The pallas case
+    runs the megakernel (interpret mode) through ``random_walk``'s
+    whole-walk dispatch, exercising buffer rotation and the SMEM state
+    mirror across L = 6 steps."""
+    src, dst, w, V = _bounce_graph(fp=fp)
+    cfg = BingoConfig(num_vertices=V, capacity=32, bias_bits=6,
+                      base_log2=base_log2, fp_bias=fp, lam=4.0)
+    st = from_edges(cfg, src, dst, w)
+    B, L = 4000, 6
+    starts = jnp.zeros((B,), jnp.int32)
+    path = np.asarray(walks.random_walk(
+        st, cfg, starts, jax.random.key(7),
+        walks.WalkParams(kind="deepwalk", length=L), backend=backend))
+    assert (path >= 0).all()          # bounce graph never terminates
+    # pool every transition leaving the hub across all steps
+    at_hub = path[:, :-1] == 0
+    nxt = path[:, 1:][at_hub]
+    assert nxt.size >= B * (L // 2)   # walkers return every other step
+    counts = np.bincount(nxt, minlength=V).astype(np.float64)
+    want = _expected_vertex_dist(st, cfg, 0, V)
+    # dof ≈ 23 live neighbors; chi2_{0.999}(23) ≈ 49.7 — 80 is lenient
+    # for a correct sampler and orders of magnitude below a wrong one.
+    assert _chi_square(counts, want) < 80.0, (backend, base_log2, fp)
+
+
+def test_whole_walk_ppr_early_termination():
+    """PPR through the whole-walk megakernel: the in-kernel alive mask
+    must terminate geometrically (mean length ≈ 1/stop_prob), hold -1
+    after termination, and emit only real edges — same key as the
+    per-step reference path, same length distribution."""
+    src, dst, w, V = _bounce_graph()
+    cfg = BingoConfig(num_vertices=V, capacity=32, bias_bits=6)
+    st = from_edges(cfg, src, dst, w)
+    B, L, stop = 3000, 80, 1.0 / 10.0
+    starts = jnp.zeros((B,), jnp.int32)
+    params = walks.WalkParams(kind="ppr", length=L, stop_prob=stop)
+    adj = {(int(s), int(d)) for s, d in zip(src, dst)}
+    lengths = {}
+    for backend in BACKENDS:
+        p = np.asarray(walks.random_walk(st, cfg, starts,
+                                         jax.random.key(3), params,
+                                         backend=backend))
+        alive = p >= 0
+        # termination holds: no walker revives after its first -1
+        assert (np.diff(alive.astype(np.int8), axis=1) <= 0).all(), backend
+        for row in p:
+            for a, b in zip(row[:-1], row[1:]):
+                if b == -1:
+                    break
+                assert (int(a), int(b)) in adj
+        lengths[backend] = float((alive.sum(1) - 1).mean())
+        assert 8.5 < lengths[backend] < 11.5, (backend, lengths)
+    # both backends draw the same geometric law (not the same stream)
+    assert abs(lengths["reference"] - lengths["pallas"]) < 1.0, lengths
+
+
 def test_ppr_runs_fused_end_to_end():
     """PPR through the pallas backend: geometric termination + valid hops."""
     V = 6

@@ -10,7 +10,9 @@ from repro.kernels import ref
 from repro.kernels.alias_build import alias_build_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
-from repro.kernels.walk_sample import walk_sample_pallas
+from repro.kernels.walk_fused import walk_fused_pallas
+from repro.kernels.walk_sample import (walk_sample_pallas,
+                                       walk_sample_uniform_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +140,163 @@ def test_walk_sample_distribution_thm41():
     want = np.zeros(6)
     want[[1, 4, 5]] = np.array([5, 4, 3]) / 12
     assert 0.5 * np.abs(got - want).sum() < 0.015
+
+
+@pytest.mark.parametrize("B,C", [(8, 16), (300, 64)])
+def test_walk_sample_uniform_matches_ref(B, C):
+    """Degree-based unbiased pick kernel vs oracle (incl. deg == 0 rows)."""
+    rng = np.random.default_rng(B * C)
+    nbr = jnp.asarray(rng.integers(0, 1000, (B, C)), jnp.int32)
+    deg = jnp.asarray(rng.integers(0, C + 1, B), jnp.int32)
+    u = jnp.asarray(rng.random((B, 1)), jnp.float32)
+    nxt_k, slot_k = walk_sample_uniform_pallas(nbr, deg, u, block_b=64,
+                                               interpret=True)
+    nxt_r, slot_r = ref.walk_sample_uniform_ref(nbr, deg, u[:, 0])
+    np.testing.assert_array_equal(np.asarray(slot_k), np.asarray(slot_r))
+    np.testing.assert_array_equal(np.asarray(nxt_k), np.asarray(nxt_r))
+    assert (np.asarray(nxt_k)[np.asarray(deg) == 0] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# walk_fused — the whole-walk megakernel (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _fused_case(seed=5, V=12, C=16, bits=6, base_log2=1, fp=False):
+    from repro.core.dyngraph import BingoConfig, from_edges
+    from tests.conftest import random_graph
+    src, dst, w = random_graph(V, C, max_bias=63, seed=seed)
+    wf = w.astype(np.float32) + 0.37 if fp else w
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=bits,
+                      base_log2=base_log2, fp_bias=fp, lam=4.0)
+    return from_edges(cfg, src, dst, wf), cfg
+
+
+@pytest.mark.parametrize("base_log2,fp,stop", [
+    (1, False, 0.0),        # base-2 integer happy path
+    (2, False, 0.0),        # digit acceptance + masked-ITS fallback
+    (1, True, 0.0),         # fp decimal group
+    (2, True, 0.15),        # everything at once, incl. PPR termination
+])
+def test_walk_fused_matches_scan_ref(base_log2, fp, stop):
+    """Megakernel (interpret) pinned step-by-step against the scan oracle
+    under *fed* uniforms — bit-exact per step, including buffer rotation
+    (L > 2), the in-kernel alive mask, and base>2/fp lane passes."""
+    st, cfg = _fused_case(base_log2=base_log2, fp=fp)
+    B, L = 37, 9
+    starts = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    u = jax.random.uniform(jax.random.key(0), (L, B, 6))
+    seed = jnp.zeros((1,), jnp.int32)
+    frac = st.frac if fp else None
+    path_k = walk_fused_pallas(st.itable.prob, st.itable.alias, st.bias,
+                               st.nbr, st.deg, frac, starts, seed, u,
+                               length=L, base_log2=base_log2,
+                               stop_prob=stop, block_b=16, interpret=True)
+    path_r = ref.walk_fused_ref(st.itable.prob, st.itable.alias, st.bias,
+                                st.nbr, st.deg, frac, starts, u,
+                                base_log2=base_log2, stop_prob=stop)
+    np.testing.assert_array_equal(np.asarray(path_k), np.asarray(path_r))
+
+
+def test_walk_fused_uniform_matches_scan_ref():
+    """simple-kind megakernel: degree pick per step, no bias/alias DMAs."""
+    st, cfg = _fused_case()
+    B, L = 23, 7
+    starts = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    u = jax.random.uniform(jax.random.key(1), (L, B, 6))
+    seed = jnp.zeros((1,), jnp.int32)
+    path_k = walk_fused_pallas(None, None, None, st.nbr, st.deg, None,
+                               starts, seed, u, length=L, uniform=True,
+                               block_b=8, interpret=True)
+    path_r = ref.walk_fused_ref(None, None, None, st.nbr, st.deg, None,
+                                starts, u, uniform=True)
+    np.testing.assert_array_equal(np.asarray(path_k), np.asarray(path_r))
+
+
+def test_walk_fused_ragged_batch_and_dead_ends():
+    """B not divisible by the walker tile (padded lanes must not leak) +
+    dead-end termination: once a walker hits a deg-0 vertex the kernel
+    emits -1 forever and stops gathering (the in-VMEM alive mask)."""
+    # path graph 0 -> 1 -> 2 (vertex 2 is a dead end)
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 2], np.int32)
+    from repro.core.dyngraph import BingoConfig, from_edges
+    cfg = BingoConfig(num_vertices=3, capacity=2, bias_bits=2)
+    st = from_edges(cfg, src, dst, np.ones(2, np.int32))
+    B, L = 13, 6                      # 13 walkers, tile of 8 -> ragged
+    starts = jnp.zeros((B,), jnp.int32)
+    u = jax.random.uniform(jax.random.key(2), (L, B, 6))
+    seed = jnp.zeros((1,), jnp.int32)
+    path = np.asarray(walk_fused_pallas(
+        st.itable.prob, st.itable.alias, st.bias, st.nbr, st.deg, None,
+        starts, seed, u, length=L, block_b=8, interpret=True))
+    assert path.shape == (B, L + 1)
+    np.testing.assert_array_equal(path[:, :3],
+                                  np.tile([0, 1, 2], (B, 1)))
+    assert (path[:, 3:] == -1).all()
+
+
+def _subjaxprs(v):
+    try:
+        from jax.extend import core as jex_core
+        jaxpr_types = (jex_core.Jaxpr, jex_core.ClosedJaxpr)
+    except ImportError:
+        jaxpr_types = (jax.core.Jaxpr, jax.core.ClosedJaxpr)
+    vals = v if isinstance(v, (list, tuple)) else [v]
+    for x in vals:
+        if isinstance(x, jaxpr_types):
+            yield x.jaxpr if hasattr(x, "jaxpr") else x
+
+
+def _count_prims(closed_jaxpr, name, *, inside_loops_only=False):
+    """Recursively count ``name`` eqns across nested (closed) jaxprs.
+
+    ``inside_loops_only`` counts only occurrences under a scan/while —
+    i.e. launches that repeat at run time."""
+
+    def walk(j, in_loop):
+        n = 0
+        for eqn in j.eqns:
+            if eqn.primitive.name == name and (in_loop or
+                                               not inside_loops_only):
+                n += 1
+            loop = in_loop or eqn.primitive.name in ("scan", "while")
+            for v in eqn.params.values():
+                for s in _subjaxprs(v):
+                    n += walk(s, loop)
+        return n
+
+    return walk(closed_jaxpr.jaxpr, False)
+
+
+def test_whole_walk_is_one_pallas_call():
+    """The megakernel launch contract: an 80-step deepwalk through the
+    pallas backend's whole-walk entry traces to EXACTLY ONE pallas_call
+    with no scan/while around it (one launch per walk batch), while the
+    per-step path wraps its pallas_call in a length-80 scan (80
+    launches at run time)."""
+    from repro.core import walks
+    from repro.core.backend import get_backend
+    st, cfg = _fused_case()
+    starts = jnp.zeros((8,), jnp.int32)
+    key = jax.random.key(0)
+    params = walks.WalkParams(kind="deepwalk", length=80)
+
+    fused = jax.make_jaxpr(
+        lambda s, k: get_backend("pallas").sample_walk(st, cfg, s, k,
+                                                       params))(starts, key)
+    assert _count_prims(fused, "pallas_call") == 1
+    # ... and that one launch is top-level: no scan/while in the trace
+    # (jax.random internals use scans) contains a pallas_call, so the
+    # launch count cannot multiply at run time.
+    assert _count_prims(fused, "pallas_call", inside_loops_only=True) == 0
+
+    step = jax.make_jaxpr(
+        lambda s, k: walks.random_walk(st, cfg, s, k, params,
+                                       backend="pallas",
+                                       whole_walk=False))(starts, key)
+    scans = [e for e in step.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 1 and scans[0].params["length"] == 80
+    assert _count_prims(step, "pallas_call", inside_loops_only=True) == 1
 
 
 # ---------------------------------------------------------------------------
