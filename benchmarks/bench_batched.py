@@ -7,13 +7,12 @@ for insertion / deletion / mixed workloads.
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import build_state, dataset_stream, record, timeit
-from repro.core.updates import batched_update, stream_updates
+from benchmarks.common import (build_state, dataset_stream, record, timeit,
+                               update_rate)
+from repro.core.updates import stream_updates
 
 SCALE = 10
 BATCH = 512
@@ -30,15 +29,15 @@ def main():
         vv = jnp.asarray(stream.v[0])
         ww = jnp.asarray(stream.w[0])
 
-        t_b = timeit(jax.jit(
-            lambda s: batched_update(s, cfg, ins, uu, vv, ww)[0]), st)
-        record("batched", f"{mode}-batched", "updates_per_s", BATCH / t_b)
+        rate_b = update_rate(st, cfg, [(ins, uu, vv, ww)])
+        record("batched", f"{mode}-batched", "updates_per_s", rate_b)
 
         t_s = timeit(jax.jit(
             lambda s: stream_updates(s, cfg, ins, uu, vv, ww)[0]), st,
             reps=1)
         record("batched", f"{mode}-streaming", "updates_per_s", BATCH / t_s)
-        record("batched", f"{mode}", "batched_speedup", t_s / t_b)
+        record("batched", f"{mode}", "batched_speedup",
+               rate_b * t_s / BATCH)
 
 
 if __name__ == "__main__":

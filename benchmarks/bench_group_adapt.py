@@ -13,10 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (build_dataset, build_state, record,
-                               state_nbytes, timeit)
+                               state_nbytes, timeit, update_rate)
 from repro.core.dyngraph import DENSE, EMPTY, ONE, REGULAR, SPARSE
 from repro.core.sampler import sample_neighbor
-from repro.core.updates import batched_update
 
 SCALE = 11
 NS = 4096
@@ -41,10 +40,9 @@ def main():
         uu = jnp.asarray(rng.integers(0, V, B), jnp.int32)
         vv = jnp.asarray(rng.integers(0, V, B), jnp.int32)
         ww = jnp.asarray(rng.integers(1, 4096, B), jnp.int32)
-        upd = jax.jit(
-            lambda s: batched_update(s, cfg, ins, uu, vv, ww)[0])
+        rate = update_rate(st, cfg, [(ins, uu, vv, ww)])
         record("group_adapt", f"{label}-update", "us_per_update",
-               timeit(upd, st) / B * 1e6)
+               1e6 / rate)
 
         if adaptive:
             gt = np.asarray(st.gtype)

@@ -1,0 +1,40 @@
+"""Update-path backend comparison: reference vs pallas updates/s.
+
+The update-side analogue of ``bench_walks``: the same §5.2 batched
+rounds (insertion / deletion / mixed workloads, §6.1 generator) are
+ingested through each registered ``EngineBackend`` — ``reference`` is
+the whole-table jnp pipeline, ``pallas`` the one-launch update
+megakernel (``kernels/update_fused.py``; interpret mode on CPU, so the
+absolute number is a correctness-priced proxy there — the comparison is
+apples-to-apples on TPU).  Rounds are prefetched onto the device
+(``graph/streams.rounds_on_device``) and the updater donates/threads the
+state, so the clock sees the update pipeline only: no host transfers,
+no ``BingoState`` copies.  ``benchmarks/run.py`` persists the rows into
+``BENCH_updates.json`` — the ingestion baseline future PRs diff against.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import build_state, dataset_stream, record, update_rate
+from repro.graph.streams import rounds_on_device
+
+SCALE = 10
+BATCH = 256
+ROUNDS = 3
+BACKENDS = ("reference", "pallas")
+
+
+def main():
+    for mode in ("insertion", "deletion", "mixed"):
+        V, stream = dataset_stream(SCALE, batch_size=BATCH, rounds=ROUNDS,
+                                   mode=mode)
+        st, cfg = build_state(V, stream.init_src, stream.init_dst,
+                              stream.init_w, capacity=128)
+        for backend in BACKENDS:
+            rate = update_rate(
+                st, cfg, rounds_on_device(stream), backend=backend)
+            record("updates", f"{mode}-{backend}", "updates_per_s", rate)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,12 @@
 
 ``python -m benchmarks.run [--only table3,...]`` prints CSV rows
 ``bench,case,metric,value`` (captured into bench_output.txt for the
-final deliverable) and writes experiments/bench_results.csv, plus
-BENCH_walks.json (repo root) — the walk-throughput baseline
+final deliverable) and writes experiments/bench_results.csv, plus two
+repo-root JSON baselines future PRs diff against: BENCH_walks.json
 (steps/s per kind × sampling path, incl. the whole-walk fused
-megakernel) that future PRs diff against.
+megakernel) and BENCH_updates.json (updates/s per §6.1 workload mode ×
+EngineBackend — reference jnp pipeline vs the pallas update
+megakernel).
 """
 
 from __future__ import annotations
@@ -19,11 +21,12 @@ import traceback
 
 from benchmarks import (bench_batched, bench_complexity, bench_fp_bias,
                         bench_group_adapt, bench_piecewise, bench_sweeps,
-                        bench_table3, bench_walks)
+                        bench_table3, bench_updates, bench_walks)
 from benchmarks.common import ROWS
 
 MODULES = {
     "walks": bench_walks,            # whole-walk fused vs per-step paths
+    "updates": bench_updates,        # batched updates: ref vs megakernel
     "table3": bench_table3,          # paper Table 3
     "complexity": bench_complexity,  # paper Table 1
     "group_adapt": bench_group_adapt,  # paper Fig. 11 + 13
@@ -36,15 +39,15 @@ MODULES = {
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _write_bench_walks(path: str) -> None:
-    """Persist the walk-throughput rows as {kind-path: steps/s} JSON."""
+def _write_bench_json(path: str, bench: str, metric: str) -> None:
+    """Persist one bench's rows as a {case: value} JSON snapshot."""
     rows = {r["case"]: r["value"] for r in ROWS
-            if r["bench"] == "walks" and r["metric"] == "steps_per_sec"}
+            if r["bench"] == bench and r["metric"] == metric}
     if not rows:
         return
     with open(path, "w") as f:
-        json.dump({"bench": "walks", "metric": "steps_per_sec",
-                   "cases": rows}, f, indent=1, sort_keys=True)
+        json.dump({"bench": bench, "metric": metric, "cases": rows},
+                  f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}", flush=True)
 
@@ -73,6 +76,36 @@ def _dry_fused_smoke() -> None:
     print("# dry: pallas whole-walk megakernel smoke ok (interpret mode)")
 
 
+def _dry_update_smoke() -> None:
+    """Run one batched round through BOTH EngineBackends at toy scale and
+    assert bit-identical states — the update megakernel path end to end
+    (interpret mode) on CPU-only CI."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core.backend import get_backend
+    from repro.core.dyngraph import BingoConfig, from_edges
+
+    V = 16
+    src = np.arange(V, dtype=np.int32)
+    dst = (src + 1) % V
+    cfg = BingoConfig(num_vertices=V, capacity=4, bias_bits=3)
+    st = from_edges(cfg, src, dst, np.ones(V, np.int32) * 3)
+    ins = jnp.array([True, True, False, False])
+    uu = jnp.array([0, 1, 2, 3], jnp.int32)
+    vv = jnp.array([5, 6, 3, 9], jnp.int32)
+    ww = jnp.array([2, 5, 1, 1], jnp.int32)
+    outs = {b: get_backend(b).apply_updates(st, cfg, ins, uu, vv, ww)
+            for b in ("reference", "pallas")}
+    (st_r, stats_r), (st_p, stats_p) = outs["reference"], outs["pallas"]
+    for a, b in zip(jax.tree.leaves((st_r, stats_r)),
+                    jax.tree.leaves((st_p, stats_p))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert int(stats_r.ins_applied) == 2 and int(stats_r.del_applied) == 1
+    print("# dry: pallas update megakernel bit-exact vs reference "
+          "(interpret mode)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -88,8 +121,9 @@ def main() -> None:
         for name, mod in MODULES.items():
             assert callable(mod.main), name
             print(f"# dry: {name} -> {mod.__name__}.main")
-        print(f"# dry: sampler backends {available_backends()}")
+        print(f"# dry: engine backends {available_backends()}")
         _dry_fused_smoke()
+        _dry_update_smoke()
         return
 
     print("bench,case,metric,value")
@@ -112,7 +146,10 @@ def main() -> None:
                                            "value"])
         wr.writeheader()
         wr.writerows(ROWS)
-    _write_bench_walks(os.path.join(REPO_ROOT, "BENCH_walks.json"))
+    _write_bench_json(os.path.join(REPO_ROOT, "BENCH_walks.json"),
+                      "walks", "steps_per_sec")
+    _write_bench_json(os.path.join(REPO_ROOT, "BENCH_updates.json"),
+                      "updates", "updates_per_s")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

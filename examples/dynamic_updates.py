@@ -1,29 +1,41 @@
 """Dynamic-graph scenario: the paper's §6.1 evaluation loop in miniature.
 
-Streams 10 rounds of mixed updates into BINGO (batched path §5.2),
-interleaving DeepWalk queries after every round — and verifies, every
-round, that the incrementally-maintained sampling space matches a
-from-scratch rebuild (the correctness contract behind the paper's
-"integrate all graph updates before each random walk computation").
+Streams 10 rounds of mixed updates into BINGO and interleaves DeepWalk
+queries after every round — the "integrate all graph updates before each
+random walk computation" contract — through the streaming serving layer:
+a ``DynamicWalkEngine`` owns the device-resident state, ingests
+device-prefetched update rounds through ``EngineBackend.apply_updates``
+(one update-megakernel launch per round on the pallas backend) and
+serves whole-walk batches in between, threading one donated
+``BingoState`` through everything.  Pass ``--coalesce 2`` to fold pairs
+of rounds into bigger batched rounds, ``--backend pallas`` to force the
+fused engine off-TPU (interpret mode — slow but the same program).
 
-  PYTHONPATH=src python examples/dynamic_updates.py
+  PYTHONPATH=src python examples/dynamic_updates.py [--coalesce 2]
 """
 
+import argparse
 import time
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.dyngraph import BingoConfig, from_edges
-from repro.core.updates import batched_update
-from repro.core import walks
+from repro.core.walks import WalkParams
 from repro.graph.rmat import degree_bias, rmat_edges
 from repro.graph.streams import make_update_stream
+from repro.serve import DynamicWalkEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None,
+                    help="engine backend (reference | pallas | auto)")
+    ap.add_argument("--coalesce", type=int, default=1,
+                    help="update rounds folded into one batched round")
+    args = ap.parse_args()
+
     scale, rounds, batch = 10, 10, 256
     src, dst = rmat_edges(scale, 8, seed=0)
     V = 1 << scale
@@ -33,19 +45,14 @@ def main():
 
     cfg = BingoConfig(num_vertices=V, capacity=512, bias_bits=10)
     state = from_edges(cfg, stream.init_src, stream.init_dst, stream.init_w)
-    upd = jax.jit(lambda s, i, u, v, ww: batched_update(
-        s, cfg, i, u, v, ww))
+    engine = DynamicWalkEngine(state, cfg,
+                               WalkParams(kind="deepwalk", length=20),
+                               backend=args.backend)
     starts = jnp.arange(0, V, 4, dtype=jnp.int32)
-    walk = jax.jit(lambda s, k: walks.deepwalk(s, cfg, starts, k,
-                                               length=20))
 
     t0 = time.time()
-    for r in range(rounds):
-        state, stats = upd(state, jnp.asarray(stream.is_insert[r]),
-                           jnp.asarray(stream.u[r]),
-                           jnp.asarray(stream.v[r]),
-                           jnp.asarray(stream.w[r]))
-        paths = walk(state, jax.random.key(r))
+    for r, stats, paths in engine.run_stream(stream, starts,
+                                             coalesce=args.coalesce):
         live = int((np.asarray(paths) >= 0).sum())
         print(f"round {r}: +{int(stats.ins_applied)} ins / "
               f"-{int(stats.del_applied)} del | "
@@ -53,7 +60,8 @@ def main():
               f"group transitions {int(stats.transitions.sum())}")
     dt = time.time() - t0
     total = rounds * batch
-    print(f"\n{total} updates + {rounds} walk rounds in {dt:.2f}s "
+    print(f"\n{total} updates + {engine.rounds_ingested} ingest rounds + "
+          f"{engine.walks_served} walks in {dt:.2f}s "
           f"({total / dt:.0f} updates/s ingested, CPU)")
 
 

@@ -1,15 +1,17 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
-"""BINGO core: dynamic sampling space, pluggable sampling backends, walks.
+"""BINGO core: dynamic sampling space, pluggable engine backends, walks.
 
-The sampling stack (DESIGN.md §7) is selected via ``BingoConfig.backend``
-and resolved through ``get_backend`` — ``"reference"`` (pure jnp),
-``"pallas"`` (fused kernel), or ``"auto"``.
+The engine stack (DESIGN.md §7/§9) is selected via
+``BingoConfig.backend`` and resolved through ``get_backend`` —
+``"reference"`` (pure jnp), ``"pallas"`` (fused kernels for sampling,
+whole walks, and batched updates), or ``"auto"``.
 """
 
-from repro.core.backend import (SamplerBackend, available_backends,
-                                get_backend, register_backend)
+from repro.core.backend import (EngineBackend, SamplerBackend,
+                                available_backends, get_backend,
+                                register_backend)
 
-__all__ = ["SamplerBackend", "available_backends", "get_backend",
-           "register_backend"]
+__all__ = ["EngineBackend", "SamplerBackend", "available_backends",
+           "get_backend", "register_backend"]

@@ -26,10 +26,26 @@ class AliasTable(NamedTuple):
     alias: jax.Array  # (..., n) int32   — redirect target per bucket
 
 
+def _row_total(w: jax.Array) -> jax.Array:
+    """Row sum as explicit left-to-right lane adds (shape ``(..., n)``).
+
+    ``jnp.sum``'s reduction order is implementation-defined and changes
+    with the surrounding fusion context — the update megakernel
+    (``kernels/update_fused.py``) rebuilds alias rows *inside* a Pallas
+    body and must reproduce this construction bit-for-bit, so both sides
+    spell the order out.  n <= 33 (the K+1 inter-group lanes), so the
+    unrolled chain is trivial.
+    """
+    total = w[..., 0]
+    for j in range(1, w.shape[-1]):
+        total = total + w[..., j]
+    return total
+
+
 def _build_row(w: jax.Array) -> AliasTable:
     """Vose's algorithm on one weight row ``w`` (n,) -> alias table row."""
     n = w.shape[-1]
-    total = jnp.sum(w)
+    total = _row_total(w)
     scaled = jnp.where(total > 0, w * n / jnp.maximum(total, 1e-30), 0.0)
     prob0 = jnp.ones((n,), jnp.float32)
     alias0 = jnp.arange(n, dtype=jnp.int32)

@@ -1,25 +1,33 @@
-"""Pluggable sampling backends — one interface, two implementations.
+"""Pluggable engine backends — one interface, two implementations.
 
-Every layer that draws a BINGO sample (the walk scan, node2vec proposals,
-the distributed walk cell, benchmarks, serving) goes through a
-``SamplerBackend`` looked up from ``cfg.backend`` (DESIGN.md §7):
+Every layer that touches the BINGO sampling space — drawing a sample
+(the walk scan, node2vec proposals, the distributed walk cell,
+benchmarks, serving) or *mutating* it (batched §5.2 update rounds) —
+goes through an ``EngineBackend`` looked up from ``cfg.backend``
+(DESIGN.md §7/§9):
 
-  * ``"reference"`` — the pure-jnp hierarchical sampler
-    (``core/sampler.py``): alias pick + materialized-group /
-    dense-rejection stage (ii) with exact ITS fallbacks.  Portable,
-    differentiably traceable, the distribution oracle.
-  * ``"pallas"``    — row gather + the fused two-stage kernel
-    (``kernels/walk_sample.py``): the whole sample happens in one VMEM
-    pass per walker tile.  Compiled on TPU; interpret mode elsewhere.
+  * ``"reference"`` — the pure-jnp engine (``core/sampler.py`` sampling,
+    ``core/updates.py`` updates): alias pick + materialized-group /
+    dense-rejection stage (ii) with exact ITS fallbacks, and the
+    whole-table insert→delete→rebuild batched update.  Portable,
+    differentiably traceable, the bit-exact oracle for both halves.
+  * ``"pallas"``    — the fused production engine: row gather + the
+    fused two-stage sample (``kernels/walk_sample.py``), the whole-walk
+    persistent megakernel (``kernels/walk_fused.py``), and the
+    batched-update megakernel (``kernels/update_fused.py``) that applies
+    a whole update round in one ``pallas_call`` with the state tables
+    HBM-resident.  Compiled on TPU; interpret mode elsewhere.
   * ``"auto"``      — resolves to ``"pallas"`` on a TPU backend and
     ``"reference"`` everywhere else.  This is the default on
-    ``BingoConfig``: production hardware gets the fused kernel without
+    ``BingoConfig``: production hardware gets the fused kernels without
     any caller opting in.
 
 Both backends realize Eq. 2 exactly (Theorem 4.1) for every group type
 (DENSE/ONE/SPARSE/REGULAR), fp-bias mode, and radix bases up to 2^k —
-``tests/test_backend_equiv.py`` pins the equivalence against
-``transition_probs`` ground truth.
+``tests/test_backend_equiv.py`` pins the sampling equivalence against
+``transition_probs`` ground truth — and apply §5.2 batched updates with
+identical semantics: ``tests/test_update_fused.py`` pins the pallas
+update path bit-exactly against ``core/updates.py:batched_update``.
 
 Beyond the per-step interface both builtins implement the *whole-walk*
 capability (DESIGN.md §8): ``sample_walk(state, cfg, starts, key,
@@ -32,6 +40,9 @@ deepwalk/ppr/simple whenever the resolved backend defines
 ``sample_walk`` (node2vec stays on the per-step proposal path — its
 Eq. 1 rejection needs the previous hop's rows).
 
+``SamplerBackend`` remains as an alias of ``EngineBackend`` for callers
+that only consume the sampling half of the protocol.
+
 Registering a new backend:
 
     @register_backend
@@ -39,6 +50,8 @@ Registering a new backend:
         name = "mine"
         def sample_step(self, state, cfg, u, key): ...
         def sample_uniform(self, state, cfg, u, key): ...
+        def apply_updates(self, state, cfg, is_insert, u, v, w,
+                          active=None): ...
         # optional whole-walk capability:
         def sample_walk(self, state, cfg, starts, key, params): ...
 """
@@ -51,19 +64,31 @@ import jax
 
 from repro.core.dyngraph import BingoConfig, BingoState
 
-__all__ = ["SamplerBackend", "register_backend", "get_backend",
-           "available_backends", "PallasBackend"]
+__all__ = ["EngineBackend", "SamplerBackend", "register_backend",
+           "get_backend", "available_backends", "PallasBackend"]
 
 
 @runtime_checkable
-class SamplerBackend(Protocol):
-    """One BINGO sample per walker; both methods are jit-traceable.
+class EngineBackend(Protocol):
+    """One BINGO engine: per-walker sampling plus batched graph updates.
+
+    Sampling half (all methods jit-traceable):
 
     ``sample_step``    — biased hierarchical sample: ``(state, cfg,
     u (B,) int32 vertices, key) -> (next_vertex (B,), slot (B,))``.
     ``sample_uniform`` — unbiased neighbor pick with the same signature
     (the ``simple`` walk kind and degree-normalized baselines).
     Callers must mask walkers sitting on degree-0 vertices.
+
+    Update half:
+
+    ``apply_updates``  — one batched §5.2 round: ``(state, cfg,
+    is_insert (B,) bool, u (B,) int32, v (B,) int32, w (B,) bias,
+    active (B,) bool | None) -> (new_state, UpdateStats)`` with the
+    reference ``core/updates.py:batched_update`` semantics (inserts
+    before deletes, earliest-version-first duplicate deletion, one
+    rebuild per affected vertex).  Implementations must be bit-exact
+    against the reference — serving interleaves backends freely.
 
     Backends may additionally implement the whole-walk capability
     ``sample_walk(state, cfg, starts (B,) int32, key, params:
@@ -81,8 +106,15 @@ class SamplerBackend(Protocol):
     def sample_uniform(self, state: BingoState, cfg: BingoConfig, u, key
                        ) -> Tuple[jax.Array, jax.Array]: ...
 
+    def apply_updates(self, state: BingoState, cfg: BingoConfig,
+                      is_insert, u, v, w, active=None): ...
 
-_REGISTRY: Dict[str, SamplerBackend] = {}
+
+# The sampling-only view predates the update half; every registered
+# backend satisfies the full protocol, so the alias is exact.
+SamplerBackend = EngineBackend
+
+_REGISTRY: Dict[str, EngineBackend] = {}
 
 
 def register_backend(cls):
@@ -96,7 +128,7 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY)) + ("auto",)
 
 
-def get_backend(name: str) -> SamplerBackend:
+def get_backend(name: str) -> EngineBackend:
     """Resolve a backend by name; ``"auto"`` picks pallas on TPU."""
     _ensure_builtin()
     if name == "auto":
@@ -105,7 +137,7 @@ def get_backend(name: str) -> SamplerBackend:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(
-            f"unknown sampler backend {name!r}; "
+            f"unknown engine backend {name!r}; "
             f"available: {available_backends()}") from None
 
 
@@ -118,14 +150,15 @@ def _ensure_builtin():
 
 @register_backend
 class PallasBackend:
-    """Fused production path: gather rows once, sample in one kernel pass.
+    """Fused production engine: sampling and updates in resident kernels.
 
-    Stage (i)+(ii) run inside ``kernels/walk_sample.py`` on per-walker
-    rows staged into VMEM; group membership is recomputed in-register from
-    the bias row, so DENSE/materialized parity is free.  Bases > 2 use
-    digit-proportional acceptance with an in-kernel exact masked-ITS
-    fallback; fp mode samples the decimal group via a frac-row ITS lane
-    pass (DESIGN.md §7) — the distribution is exactly Eq. 2 in all modes.
+    Sampling stage (i)+(ii) run inside ``kernels/walk_sample.py`` on
+    per-walker rows staged into VMEM; group membership is recomputed
+    in-register from the bias row, so DENSE/materialized parity is free.
+    Bases > 2 use digit-proportional acceptance with an in-kernel exact
+    masked-ITS fallback; fp mode samples the decimal group via a
+    frac-row ITS lane pass (DESIGN.md §7) — the distribution is exactly
+    Eq. 2 in all modes.
 
     Whole walks skip the per-step path entirely: ``sample_walk`` hands
     the full ``BingoState`` tables to the persistent megakernel
@@ -133,6 +166,12 @@ class PallasBackend:
     one ``pallas_call`` with walker state resident in VMEM and only the
     current walkers' rows DMA'd per step — no (B, C) gather ever
     materializes in HBM.
+
+    Batched updates take the same shape (``kernels/update_fused.py``,
+    DESIGN.md §9): one ``pallas_call`` per round, tables HBM-resident
+    and aliased in-place, per-affected-vertex rows DMA'd through
+    double-buffered VMEM for the insert → two-phase delete → rebuild
+    staging — bit-identical to the reference ``batched_update``.
     """
 
     name = "pallas"
@@ -171,3 +210,7 @@ class PallasBackend:
             state.deg, state.frac if cfg.fp_bias else None, starts, key,
             length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
             uniform=params.kind == "simple")
+
+    def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
+        from repro.kernels import ops
+        return ops.update_fused(state, cfg, is_insert, u, v, w, active)

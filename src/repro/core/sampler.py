@@ -148,11 +148,13 @@ def sample_neighbor(state: BingoState, cfg: BingoConfig, u, key
 
 @register_backend
 class ReferenceBackend:
-    """Pure-jnp hierarchical sampler as a ``SamplerBackend``.
+    """Pure-jnp engine as an ``EngineBackend``.
 
-    The unfused gather → alias pick → group pick pipeline above, exact in
+    The unfused gather → alias pick → group pick sampling pipeline above
+    plus the whole-table batched update (``core/updates.py``), exact in
     every mode; serves as the portable fallback and the oracle the pallas
-    backend is validated against (tests/test_backend_equiv.py).
+    backend is validated against (tests/test_backend_equiv.py for
+    sampling, tests/test_update_fused.py bit-exactly for updates).
     """
 
     name = "reference"
@@ -172,6 +174,13 @@ class ReferenceBackend:
         for the pallas megakernel (``core/walks.py:scan_walk``)."""
         from repro.core import walks   # runtime import: walks imports us
         return walks.scan_walk(self, state, cfg, starts, key, params)
+
+    def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
+        """Batched §5.2 round via the whole-table jnp pipeline — the
+        bit-exact oracle the pallas update megakernel is pinned against
+        (``tests/test_update_fused.py``)."""
+        from repro.core.updates import batched_update  # runtime: no cycle
+        return batched_update(state, cfg, is_insert, u, v, w, active=active)
 
 
 def transition_probs(state: BingoState, cfg: BingoConfig, u):

@@ -22,11 +22,20 @@ Batched path (high-throughput — paper principle (i), §5.2):
   * one group/alias rebuild per affected vertex (the paper rebuilds
     per-transition; batched mode amortizes a single vectorized rebuild —
     DESIGN.md §2).
+
+``batched_update`` here is the whole-table jnp pipeline — the reference
+half of the update stack and the bit-exact oracle for the pallas
+update megakernel (``kernels/update_fused.py``, DESIGN.md §9).  Callers
+reach whichever is configured through ``EngineBackend.apply_updates``
+(``core/backend.py``) or the donated ``make_updater`` closure below;
+streaming *singles* stay on this jnp path on every backend — an O(K)
+touch per update cannot amortize a kernel launch (DESIGN.md §9).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +47,7 @@ from repro.core.dyngraph import (DENSE, EMPTY, BingoConfig, BingoState,
                                  classify, refresh_vertices)
 
 __all__ = ["insert_edge", "delete_edge", "stream_updates", "batched_update",
-           "UpdateStats", "two_phase_delete"]
+           "UpdateStats", "two_phase_delete", "make_updater"]
 
 
 class UpdateStats(NamedTuple):
@@ -371,3 +380,25 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     trans = jnp.zeros((25,), jnp.int32).at[
         jnp.where(changed, pair, 25)].add(1, mode="drop").reshape(5, 5)
     return st, UpdateStats(n_ins, n_del, trans)
+
+
+def make_updater(cfg: BingoConfig, backend: Optional[str] = None):
+    """Jitted batched-update closure (cfg/backend static), donated state.
+
+    Mirrors ``core/walks.py:make_walker``: returns ``run(st, is_insert,
+    u, v, w) -> (st, UpdateStats)`` with the state donated
+    (``donate_argnums=0``) and threaded through, so XLA aliases the full
+    ``BingoState`` buffers input→output and repeated update rounds never
+    copy the tables — callers rebind ``st, stats = run(st, ...)``
+    (``serve/dynwalk.py``, ``launch/train.py``, benchmarks).  The round
+    is applied through the ``EngineBackend`` named by ``backend``
+    (default ``cfg.backend``): the jnp pipeline on the reference
+    backend, one update-megakernel launch on pallas.
+    """
+    from repro.core.backend import get_backend
+    bk = get_backend(cfg.backend if backend is None else backend)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def run(st, is_insert, u, v, w):
+        return bk.apply_updates(st, cfg, is_insert, u, v, w)
+    return run

@@ -1,10 +1,12 @@
 """Graph substrate: generators, update streams, and 1-D partitioning."""
 
 from repro.graph.rmat import rmat_edges, degree_bias, sample_bias
-from repro.graph.streams import UpdateStream, make_update_stream
+from repro.graph.streams import (UpdateStream, make_update_stream,
+                                 rounds_on_device)
 from repro.graph.partition import Partition1D
 
 __all__ = [
     "rmat_edges", "degree_bias", "sample_bias",
-    "UpdateStream", "make_update_stream", "Partition1D",
+    "UpdateStream", "make_update_stream", "rounds_on_device",
+    "Partition1D",
 ]

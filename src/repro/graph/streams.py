@@ -12,11 +12,12 @@ duplicate, matching the paper's generator.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from collections import deque
+from typing import Iterator, NamedTuple, Tuple
 
 import numpy as np
 
-__all__ = ["UpdateStream", "make_update_stream"]
+__all__ = ["UpdateStream", "make_update_stream", "rounds_on_device"]
 
 
 class UpdateStream(NamedTuple):
@@ -92,3 +93,43 @@ def make_update_stream(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
 
     n0 = len(a_idx)
     return UpdateStream(src[a_idx], dst[a_idx], w[a_idx], ins, uu, vv, ww)
+
+
+def rounds_on_device(stream: UpdateStream, *, prefetch: int = 2,
+                     coalesce: int = 1, device=None,
+                     ) -> Iterator[Tuple]:
+    """Yield ``(is_insert, u, v, w)`` rounds as *device-resident* arrays.
+
+    ``jax.device_put`` is asynchronous, so keeping ``prefetch`` rounds
+    in flight overlaps the numpy→device upload of round r+1..r+prefetch
+    with the consumer's work on round r — update benchmarks measure the
+    update pipeline, not host transfers (the same reason the training
+    input pipeline prefetches batches).  ``coalesce > 1`` concatenates
+    that many consecutive rounds into one larger batch before upload —
+    the serving-side lever that trades update latency for the §5.2
+    batched-path throughput (``serve/dynwalk.py``).
+    """
+    import jax  # host-side builder module; jax only for the uploads
+
+    rounds = stream.is_insert.shape[0]
+    if coalesce < 1:
+        raise ValueError(f"coalesce must be >= 1; got {coalesce}")
+
+    def host_round(j):
+        lo, hi = j * coalesce, min((j + 1) * coalesce, rounds)
+        sl = slice(lo, hi)
+        return (stream.is_insert[sl].reshape(-1),
+                stream.u[sl].reshape(-1), stream.v[sl].reshape(-1),
+                stream.w[sl].reshape(-1))
+
+    n = -(-rounds // coalesce)
+    queue: deque = deque()
+    nxt = 0
+    while nxt < n and len(queue) < max(1, prefetch):
+        queue.append(jax.device_put(host_round(nxt), device))
+        nxt += 1
+    while queue:
+        if nxt < n:
+            queue.append(jax.device_put(host_round(nxt), device))
+            nxt += 1
+        yield queue.popleft()

@@ -10,6 +10,11 @@ Kernels:
   * ``walk_fused``      — persistent whole-walk megakernel: the entire
     L-step walk in ONE launch, tables HBM-resident, per-step row DMAs
     double-buffered into VMEM (DESIGN.md §8 — the production walk path);
+  * ``update_fused``    — batched-update megakernel: one §5.2
+    insert→two-phase-delete→rebuild round in ONE launch, tables
+    HBM-resident and aliased in place, affected rows DMA'd through
+    double-buffered VMEM; bit-exact against ``core/updates.py``
+    (DESIGN.md §9 — the production batched-update path);
   * ``walk_sample``     — fused hierarchical BINGO sampling, one step per
     launch (paper §4.1's O(1) sampling claim; node2vec proposals and the
     distributed per-step exchange cell still run through it);
@@ -22,7 +27,9 @@ Kernels:
 """
 
 from repro.kernels.ops import (alias_build, flash_attention, radix_hist,
-                               walk_fused, walk_sample, walk_sample_uniform)
+                               update_fused, walk_fused, walk_sample,
+                               walk_sample_uniform)
 
-__all__ = ["walk_fused", "walk_sample", "walk_sample_uniform",
-           "alias_build", "radix_hist", "flash_attention"]
+__all__ = ["walk_fused", "update_fused", "walk_sample",
+           "walk_sample_uniform", "alias_build", "radix_hist",
+           "flash_attention"]

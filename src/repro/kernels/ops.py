@@ -15,12 +15,14 @@ from repro.kernels import ref as _ref
 from repro.kernels.alias_build import alias_build_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
+from repro.kernels.update_fused import update_fused_pallas
 from repro.kernels.walk_fused import NUM_UNIFORMS, walk_fused_pallas
 from repro.kernels.walk_sample import (walk_sample_pallas,
                                        walk_sample_uniform_pallas)
 
 __all__ = ["walk_sample", "walk_sample_uniform", "walk_fused",
-           "alias_build", "radix_hist", "flash_attention", "on_tpu"]
+           "update_fused", "alias_build", "radix_hist", "flash_attention",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -89,6 +91,26 @@ def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, *,
                              seed, u, length=length, base_log2=base_log2,
                              stop_prob=stop_prob, uniform=uniform,
                              block_b=block_b, interpret=not on_tpu())
+
+
+def update_fused(state, cfg, is_insert, u, v, w, active=None, *,
+                 block_rows: int = 8, block_dels: int = 0,
+                 force_ref: bool = False):
+    """Whole batched §5.2 update round: one megakernel launch.
+
+    The oracle is ``core/updates.py:batched_update`` itself — the fused
+    path must (and ``tests/test_update_fused.py`` asserts it does)
+    produce a bit-identical ``BingoState`` and ``UpdateStats``.
+    ``force_ref=True`` routes to it directly (dry-run/roofline cells,
+    where HLO cost analysis needs real FLOPs).
+    """
+    if force_ref:
+        from repro.core.updates import batched_update
+        return batched_update(state, cfg, is_insert, u, v, w, active=active)
+    return update_fused_pallas(state, cfg, is_insert, u, v, w, active,
+                               block_rows=block_rows,
+                               block_dels=block_dels,
+                               interpret=not on_tpu())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

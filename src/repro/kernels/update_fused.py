@@ -1,0 +1,484 @@
+"""Persistent batched-update megakernel: §5.2 insert→delete→rebuild in VMEM.
+
+The reference ``core/updates.py:batched_update`` realizes the paper's
+high-throughput batched pipeline as whole-table jnp: every stage scatters
+into / gathers out of the full ``(V, C)`` adjacency tensors in HBM, and
+the rebuild re-materializes ``(U, C, K)`` digit intermediates.  This
+kernel is the update-side sibling of ``kernels/walk_fused.py``: ONE
+``pallas_call`` owns the whole batched round, the ``BingoState`` tables
+stay HBM-resident (``memory_space=ANY`` operands, aliased input→output so
+untouched vertices are never copied), and per grid step only the
+*affected* vertices' rows are DMA'd into double-buffered VMEM scratch.
+
+Staging per affected-vertex tile of Rt rows (paper Fig. 10(a)):
+
+  * **host-order prepass (jnp, outside the kernel)** — the paper's
+    "CPU-side ordering becomes an on-device sort": inserts sorted by
+    vertex with segmented ranks, deletes lexsorted by (vertex, value)
+    with duplicate ranks, both scattered into dense per-affected-row
+    *patches* (value + target-slot masks).  Ordering only — no
+    ``BingoState`` tensor is touched outside the kernel;
+  * **inserts** — conflict-free append: one lane select places each
+    patch value at its precomputed slot ``deg + rank`` (the scatter the
+    reference does in HBM happens on the VMEM-resident row);
+  * **deletes** — in-kernel locate (the (rank+1)-th occurrence of each
+    doomed value, a masked lane cumsum per patch lane — deletes must see
+    the rows *after* this round's inserts) followed by the paper's
+    **two-phase delete-and-swap**: phase 1 kills doomed tail slots in
+    place, phase 2 moves the surviving tail slots into the front holes
+    (a one-hot move per hole index — gather-free, bit-identical to
+    ``updates.two_phase_delete``);
+  * **rebuild** — group membership, sizes, digit sums, Eq. 9 types, the
+    compacted ``gmem`` rows (one-hot compaction per radix position) and
+    the K(+1)-entry inter-group alias row (lane-parallel Vose, matching
+    ``alias._build_row`` float-for-float) are recomputed from the final
+    bias row, exactly like ``dyngraph.build_vertex_groups`` +
+    ``build_itable_rows``.
+
+Rows travel HBM→VMEM→HBM once each; the gathers for tile i+1 are issued
+while tile i computes (same double-buffered ``make_async_copy``
+discipline as the walk megakernel).  Per-row results that are O(K)-sized
+(deg, gsize, digitsum, wdec, gtype, alias rows) come back as dense
+blocked outputs and are scattered outside the kernel — they are three
+orders of magnitude smaller than the row tables the kernel keeps
+in place.
+
+Static bound: each affected vertex carries at most ``block_dels`` delete
+*patch* lanes per round (default ``min(B, 2·C)``).  When ``B <= 2·C``
+— every test, the bench rounds, and any sanely-coalesced serving round
+— every delete in the batch gets a lane, so the bound is vacuous and
+the path is exact unconditionally.  Beyond that, a single vertex
+receiving more than ``del_lanes`` delete lanes in one round (possible
+only for batches much larger than capacity where most of those lanes
+are *misses* — at most C can ever succeed) would have its
+lexsort-latest lanes dropped; raise ``block_dels`` for such workloads
+or split the round.
+
+The oracle is ``core/updates.py:batched_update`` itself (DESIGN.md §9):
+``tests/test_update_fused.py`` pins the full ``BingoState`` bit-exactly
+across group types, fp-bias, bases 2/4 and insert/delete/mixed rounds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import radix
+from repro.core.alias import AliasTable
+from repro.core.dyngraph import DENSE, BingoConfig, BingoState, classify
+from repro.core.updates import UpdateStats, _padded_unique
+
+__all__ = ["update_fused_pallas"]
+
+
+def _vose_rows(w):
+    """Lane-parallel Vose pairing, bit-identical to ``alias._build_row``.
+
+    ``kernels/alias_build.py`` carries the same loop but folds the
+    ``-1.0`` into the broadcast add; the reference adds
+    ``scaled[s] - 1.0`` to ``scaled[l]``, and float addition is not
+    associative — this copy keeps the reference's parenthesization (and
+    ``alias._row_total``'s explicit left-to-right total, which a fused
+    reduce inside the kernel body would silently reassociate) so the
+    rebuilt itable rows match the jnp oracle bit-for-bit.
+    """
+    from repro.core.alias import _row_total
+    R, n = w.shape
+    total = _row_total(w)[:, None]
+    scaled = jnp.where(total > 0, w * n / jnp.maximum(total, 1e-30), 0.0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (R, n), 1)
+    prob0 = jnp.ones((R, n), jnp.float32)
+    done0 = jnp.zeros((R, n), bool)
+
+    def body(_, carry):
+        scaled, prob, alias, done = carry
+        small = (~done) & (scaled < 1.0)
+        large = (~done) & (scaled >= 1.0)
+        do = (jnp.any(small, -1) & jnp.any(large, -1))[:, None]
+        s = jnp.argmax(small, axis=-1)[:, None]
+        l = jnp.argmax(large, axis=-1)[:, None]
+        at_s = col == s
+        at_l = col == l
+        sval = jnp.sum(jnp.where(at_s, scaled, 0.0), -1, keepdims=True)
+        prob = jnp.where(do & at_s, sval, prob)
+        alias = jnp.where(do & at_s, l, alias)
+        scaled = jnp.where(do & at_l, scaled + (sval - 1.0), scaled)
+        done = jnp.where(do & at_s, True, done)
+        return scaled, prob, alias, done
+
+    _, prob, alias, _ = jax.lax.fori_loop(
+        0, n, body, (scaled, prob0, col, done0))
+    return prob, alias
+
+
+def _kernel(cfg: BingoConfig, Rt, Dp, *refs):
+    V, C, K = cfg.num_vertices, cfg.capacity, cfg.num_radix
+    Cg, Kin = cfg.group_capacity, cfg.num_inter
+    has_ginv = not cfg.adaptive
+    refs = list(refs)
+    u_any = refs.pop(0)                        # (Bp,) ANY — affected rows
+    deg_ref = refs.pop(0)                      # (Rt, 1) deg after inserts
+    insm_ref, insn_ref = refs.pop(0), refs.pop(0)
+    insb_ref, insf_ref = refs.pop(0), refs.pop(0)
+    delo_ref, delv_ref, delr_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    nbr_any, bias_any, frac_any = refs.pop(0), refs.pop(0), refs.pop(0)
+    gmem_any = refs.pop(0)
+    ginv_any = refs.pop(0) if has_ginv else None
+    # outputs: aliased ANY row tables, then dense per-row blocks
+    nbr_o, bias_o, frac_o, gmem_o = (refs.pop(0), refs.pop(0),
+                                     refs.pop(0), refs.pop(0))
+    ginv_o = refs.pop(0) if has_ginv else None
+    dego_ref, gsz_ref, dsum_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    wdec_ref, gt_ref = refs.pop(0), refs.pop(0)
+    prob_ref, alias_ref, delok_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    # scratch
+    nbr_b, bias_b, frac_b = refs.pop(0), refs.pop(0), refs.pop(0)
+    out_nbr, out_bias, out_frac = refs.pop(0), refs.pop(0), refs.pop(0)
+    out_gmem = refs.pop(0)
+    out_ginv = refs.pop(0) if has_ginv else None
+    u_sm, gsem, osem, usem = refs              # SMEM (2, Rt), DMA sems
+
+    i = pl.program_id(0)
+    nt = pl.num_programs(0)
+    slot = jax.lax.rem(i, 2)
+
+    def load_u(s, tile):
+        cp = pltpu.make_async_copy(u_any.at[pl.ds(tile * Rt, Rt)],
+                                   u_sm.at[s], usem)
+        cp.start()
+        cp.wait()
+
+    def gather(s, action):
+        """Start/wait the row DMAs of every real (non-sentinel) row.
+
+        The predicate is stable between the paired start/wait loops:
+        ``u_sm[s]`` is only rewritten when slot ``s`` is reloaded for a
+        later tile, after this tile's wait."""
+        def body(r, _):
+            @pl.when(u_sm[s, r] < V)
+            def _():
+                vtx = u_sm[s, r]
+                for tab, buf in ((nbr_any, nbr_b), (bias_any, bias_b),
+                                 (frac_any, frac_b)):
+                    getattr(pltpu.make_async_copy(
+                        tab.at[vtx], buf.at[s, r], gsem.at[s]), action)()
+            return 0
+        jax.lax.fori_loop(0, Rt, body, 0)
+
+    @pl.when(i == 0)
+    def _():
+        load_u(0, 0)
+        gather(0, "start")
+
+    gather(slot, "wait")
+
+    # double buffering: tile i+1's row gathers run under tile i's compute
+    @pl.when(i + 1 < nt)
+    def _():
+        nslot = jax.lax.rem(i + 1, 2)
+        load_u(nslot, i + 1)
+        gather(nslot, "start")
+
+    # ---- stage 1: conflict-free inserts (patch lanes -> row slots) ----
+    insm = insm_ref[...] != 0
+    nbr1 = jnp.where(insm, insn_ref[...], nbr_b[slot])
+    bias1 = jnp.where(insm, insb_ref[...], bias_b[slot])
+    frac1 = jnp.where(insm, insf_ref[...], frac_b[slot])
+    d = deg_ref[...]                              # (Rt, 1) post-insert deg
+    colC = jax.lax.broadcasted_iota(jnp.int32, (Rt, C), 1)
+    in_row = colC < d
+
+    # ---- stage 2a: locate — (rank+1)-th match of each doomed value ----
+    delo, delv, delr = delo_ref[...], delv_ref[...], delr_ref[...]
+    colD = jax.lax.broadcasted_iota(jnp.int32, (Rt, Dp), 1)
+
+    def locate(j, carry):
+        dmask, okv = carry
+        at_j = colD == j
+        on = jnp.sum(jnp.where(at_j, delo, 0), -1, keepdims=True) != 0
+        dvj = jnp.sum(jnp.where(at_j, delv, 0), -1, keepdims=True)
+        rkj = jnp.sum(jnp.where(at_j, delr, 0), -1, keepdims=True)
+        m = (nbr1 == dvj) & in_row & on
+        cnt = jnp.cumsum(m.astype(jnp.int32), axis=-1)
+        hit = m & (cnt == rkj + 1)
+        got = jnp.any(hit, axis=-1, keepdims=True)
+        okv = jnp.where(at_j & got, 1, okv)
+        return dmask | hit, okv
+
+    dmask, delok = jax.lax.fori_loop(
+        0, Dp, locate, (jnp.zeros((Rt, C), bool),
+                        jnp.zeros((Rt, Dp), jnp.int32)))
+    delok_ref[...] = delok
+
+    # ---- stage 2b: two-phase delete-and-swap (paper Fig. 10(b)) ----
+    n = jnp.sum(dmask.astype(jnp.int32), -1, keepdims=True)
+    front = d - n
+    is_tail = (colC >= front) & in_row
+    surv_tail = is_tail & ~dmask
+    hole = dmask & (colC < front)
+    r_surv = jnp.cumsum(surv_tail.astype(jnp.int32), -1) - 1
+    r_hole = jnp.cumsum(hole.astype(jnp.int32), -1) - 1
+
+    def mv(j, vals):
+        # phase 2, hole j: the j-th surviving tail slot fills the j-th
+        # front hole (a one-hot read + one-hot write — no gathers).
+        nbr2, bias2, frac2 = vals
+        sel_h = hole & (r_hole == j)
+        sel_s = surv_tail & (r_surv == j)
+        put = sel_h & jnp.any(sel_s, -1, keepdims=True)
+        vn = jnp.sum(jnp.where(sel_s, nbr1, 0), -1, keepdims=True)
+        vb = jnp.sum(jnp.where(sel_s, bias1, 0), -1, keepdims=True)
+        vf = jnp.sum(jnp.where(sel_s, frac1, 0.0), -1, keepdims=True)
+        return (jnp.where(put, vn, nbr2), jnp.where(put, vb, bias2),
+                jnp.where(put, vf, frac2))
+
+    nbr2, bias2, frac2 = jax.lax.fori_loop(0, C, mv, (nbr1, bias1, frac1))
+    keep = colC < front
+    nbr3 = jnp.where(keep, nbr2, -1)
+    bias3 = jnp.where(keep, bias2, 0)
+    frac3 = jnp.where(keep, frac2, 0.0)
+
+    # ---- stage 3: rebuild (dyngraph.build_vertex_groups, tile-wide) ----
+    digs = jnp.where(keep[..., None],
+                     radix.digits(bias3, K, cfg.base_log2), 0)  # (Rt, C, K)
+    member = digs != 0
+    gsize = jnp.sum(member.astype(jnp.int32), axis=1)           # (Rt, K)
+    digitsum = jnp.sum(digs, axis=1)
+    gtype = classify(gsize, front[:, 0], cfg)                   # (Rt, K) i8
+    pos = jnp.cumsum(member.astype(jnp.int32), axis=1) - 1
+    keepm = member & (pos < Cg)
+    if cfg.adaptive:
+        keepm = keepm & (gtype[:, None, :] != DENSE)
+    colG = jax.lax.broadcasted_iota(jnp.int32, (Rt, C, Cg), 2)
+    rows = []
+    for k in range(K):
+        onehot = keepm[:, :, k, None] & (pos[:, :, k, None] == colG)
+        val = jnp.sum(jnp.where(onehot, colC[:, :, None], 0), axis=1)
+        rows.append(jnp.where(jnp.any(onehot, axis=1), val, -1))
+    out_gmem[...] = jnp.stack(rows, axis=1)                     # (Rt, K, Cg)
+    if has_ginv:
+        out_ginv[...] = jnp.where(member, pos, -1).transpose(0, 2, 1)
+    wdec = jnp.sum(jnp.where(keep, frac3, 0.0), axis=-1, keepdims=True)
+
+    gw = radix.group_weights(digitsum, cfg.base_log2)           # (Rt, K) f32
+    if cfg.fp_bias:
+        gw = jnp.concatenate([gw, wdec], axis=-1)               # (Rt, Kin)
+    prob, alias = _vose_rows(gw)
+
+    dego_ref[...] = front
+    gsz_ref[...] = gsize
+    dsum_ref[...] = digitsum
+    wdec_ref[...] = wdec
+    gt_ref[...] = gtype.astype(jnp.int32)
+    prob_ref[...] = prob
+    alias_ref[...] = alias
+
+    out_nbr[...] = nbr3
+    out_bias[...] = bias3
+    out_frac[...] = frac3
+
+    def put(action):
+        def body(r, _):
+            @pl.when(u_sm[slot, r] < V)
+            def _():
+                vtx = u_sm[slot, r]
+                pairs = [(out_nbr, nbr_o), (out_bias, bias_o),
+                         (out_frac, frac_o), (out_gmem, gmem_o)]
+                if has_ginv:
+                    pairs.append((out_ginv, ginv_o))
+                for src, dst in pairs:
+                    getattr(pltpu.make_async_copy(
+                        src.at[r], dst.at[vtx], osem), action)()
+            return 0
+        jax.lax.fori_loop(0, Rt, body, 0)
+
+    put("start")
+    put("wait")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "block_rows", "block_dels",
+                                    "interpret"))
+def update_fused_pallas(state: BingoState, cfg: BingoConfig, is_insert,
+                        u, v, w, active=None, *, block_rows: int = 8,
+                        block_dels: int = 0, interpret: bool = False):
+    """Batched §5.2 update round in ONE ``pallas_call``.
+
+    Same contract as ``core/updates.py:batched_update`` (bit-identical
+    output — the jnp path is the oracle): apply ``is_insert[b] ?
+    insert(u, v, w) : delete(u, v)`` for every active lane, inserts
+    before deletes, earliest-version-first duplicate deletion, one
+    group/alias rebuild per affected vertex.  Returns
+    ``(new_state, UpdateStats)``.
+
+    ``block_dels`` caps the per-vertex delete patch lanes (the module
+    docstring's static bound); 0 picks ``min(B, 2·C)``, which is exact
+    for every batch when ``B <= 2·C`` and leaves headroom for skewed
+    larger ones.
+    """
+    V, C, K = cfg.num_vertices, cfg.capacity, cfg.num_radix
+    Cg, Kin = cfg.group_capacity, cfg.num_inter
+    B = u.shape[0]
+    u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    ins = is_insert & active
+    dele = (~is_insert) & active
+    if cfg.fp_bias:
+        w_int, w_frac = radix.decompose_fp(w, cfg.lam)
+    else:
+        w_int = jnp.asarray(w, jnp.int32)
+        w_frac = jnp.zeros((B,), jnp.float32)
+
+    # ---- ordering prepass (the reference's stage-1/2 sorts, verbatim) ----
+    U = _padded_unique(jnp.where(active, u, V), V)              # (B,)
+    Uc = jnp.minimum(U, V - 1)
+    idx = jnp.arange(B, dtype=jnp.int32)
+
+    su = jnp.where(ins, u, V)
+    order = jnp.argsort(su)
+    su_s, v_s = su[order], v[order]
+    wi_s, wf_s = w_int[order], w_frac[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), su_s[1:] != su_s[:-1]])
+    rank = idx - jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
+    off = state.deg[jnp.minimum(su_s, V - 1)] + rank
+    okA = (su_s < V) & (off < C)
+    n_ins = jnp.sum(okA, dtype=jnp.int32)
+    rowA = jnp.where(okA, jnp.searchsorted(U, su_s).astype(jnp.int32), B)
+    offA = jnp.where(okA, off, 0)
+    ins_mask = jnp.zeros((B, C), jnp.int32).at[rowA, offA].set(1, mode="drop")
+    ins_nbr = jnp.zeros((B, C), jnp.int32).at[rowA, offA].set(
+        v_s, mode="drop")
+    ins_bias = jnp.zeros((B, C), jnp.int32).at[rowA, offA].set(
+        wi_s, mode="drop")
+    ins_frac = jnp.zeros((B, C), jnp.float32).at[rowA, offA].set(
+        wf_s, mode="drop")
+    ins_cnt = jnp.zeros((B,), jnp.int32).at[rowA].add(1, mode="drop")
+    deg_ins = state.deg[Uc] + ins_cnt
+
+    du = jnp.where(dele, u, V)
+    dv = jnp.where(dele, v, -1)
+    ordD = jnp.lexsort((dv, du))
+    du_s, dv_s = du[ordD], dv[ordD]
+    firstD = jnp.concatenate(
+        [jnp.ones((1,), bool),
+         (du_s[1:] != du_s[:-1]) | (dv_s[1:] != dv_s[:-1])])
+    rankD = idx - jax.lax.cummax(jnp.where(firstD, idx, -1), axis=0)
+    Dp = block_dels if block_dels > 0 else min(B, 2 * C)
+    firstR = jnp.concatenate([jnp.ones((1,), bool), du_s[1:] != du_s[:-1]])
+    lane = idx - jax.lax.cummax(jnp.where(firstR, idx, -1), axis=0)
+    rowD = jnp.where((du_s < V) & (lane < Dp),
+                     jnp.searchsorted(U, du_s).astype(jnp.int32), B)
+    laneD = jnp.minimum(lane, Dp - 1)
+    del_on = jnp.zeros((B, Dp), jnp.int32).at[rowD, laneD].set(
+        1, mode="drop")
+    del_v = jnp.full((B, Dp), -1, jnp.int32).at[rowD, laneD].set(
+        dv_s, mode="drop")
+    del_rank = jnp.zeros((B, Dp), jnp.int32).at[rowD, laneD].set(
+        rankD, mode="drop")
+
+    # ---- pad the affected-row axis to the tile size ----
+    Rt = max(1, min(block_rows, B))
+    nt = -(-B // Rt)
+    pad = nt * Rt - B
+
+    def padr(x, fill):
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                       constant_values=fill)
+
+    Up = padr(U, V)
+    has_ginv = state.ginv is not None
+
+    def row_spec(lane):
+        return pl.BlockSpec((Rt, lane), lambda i: (i, 0))
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = ([any_spec, row_spec(1)] + [row_spec(C)] * 4
+                + [row_spec(Dp)] * 3
+                + [any_spec] * (5 if has_ginv else 4))
+    args = [Up, padr(deg_ins[:, None], 0), padr(ins_mask, 0),
+            padr(ins_nbr, 0), padr(ins_bias, 0), padr(ins_frac, 0),
+            padr(del_on, 0), padr(del_v, -1), padr(del_rank, 0),
+            state.nbr, state.bias, state.frac, state.gmem]
+    if has_ginv:
+        args.append(state.ginv)
+
+    Bp = nt * Rt
+    sds = jax.ShapeDtypeStruct
+    out_specs = [any_spec] * (5 if has_ginv else 4) + [
+        row_spec(1), row_spec(K), row_spec(K), row_spec(1), row_spec(K),
+        row_spec(Kin), row_spec(Kin), row_spec(Dp)]
+    out_shape = [sds((V, C), jnp.int32), sds((V, C), jnp.int32),
+                 sds((V, C), jnp.float32), sds((V, K, Cg), jnp.int32)]
+    if has_ginv:
+        out_shape.append(sds((V, K, C), jnp.int32))
+    out_shape += [sds((Bp, 1), jnp.int32), sds((Bp, K), jnp.int32),
+                  sds((Bp, K), jnp.int32), sds((Bp, 1), jnp.float32),
+                  sds((Bp, K), jnp.int32), sds((Bp, Kin), jnp.float32),
+                  sds((Bp, Kin), jnp.int32), sds((Bp, Dp), jnp.int32)]
+    # aliased in-place tables: untouched vertices are never copied
+    first_tab = 9
+    aliases = {first_tab + t: t for t in range(5 if has_ginv else 4)}
+
+    scratch = [
+        pltpu.VMEM((2, Rt, C), jnp.int32),      # nbr rows, double-buffered
+        pltpu.VMEM((2, Rt, C), jnp.int32),      # bias rows
+        pltpu.VMEM((2, Rt, C), jnp.float32),    # frac rows
+        pltpu.VMEM((Rt, C), jnp.int32),         # out nbr
+        pltpu.VMEM((Rt, C), jnp.int32),         # out bias
+        pltpu.VMEM((Rt, C), jnp.float32),       # out frac
+        pltpu.VMEM((Rt, K, Cg), jnp.int32),     # out gmem
+    ]
+    if has_ginv:
+        scratch.append(pltpu.VMEM((Rt, K, C), jnp.int32))
+    scratch += [
+        pltpu.SMEM((2, Rt), jnp.int32),         # affected ids (DMA scalars)
+        pltpu.SemaphoreType.DMA((2,)),          # row gathers, per slot
+        pltpu.SemaphoreType.DMA(()),            # row write-backs
+        pltpu.SemaphoreType.DMA(()),            # id mirror
+    ]
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, cfg, Rt, Dp),
+        grid=(nt,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*args)
+    outs = list(outs)
+    nbr_n, bias_n, frac_n, gmem_n = outs[:4]
+    ginv_n = outs[4] if has_ginv else None
+    (dego, gsz, dsum, wdec, gt, prob, alias, delok) = \
+        outs[5:] if has_ginv else outs[4:]
+
+    st = state._replace(
+        nbr=nbr_n, bias=bias_n, frac=frac_n, gmem=gmem_n, ginv=ginv_n,
+        deg=state.deg.at[Up].set(dego[:, 0], mode="drop"),
+        gsize=state.gsize.at[Up].set(gsz, mode="drop"),
+        digitsum=state.digitsum.at[Up].set(dsum, mode="drop"),
+        wdec=state.wdec.at[Up].set(wdec[:, 0], mode="drop"),
+        gtype=state.gtype.at[Up].set(gt.astype(jnp.int8), mode="drop"),
+        itable=AliasTable(
+            prob=state.itable.prob.at[Up].set(prob, mode="drop"),
+            alias=state.itable.alias.at[Up].set(alias, mode="drop"),
+        ),
+    )
+
+    n_del = jnp.sum(delok, dtype=jnp.int32)
+    old_gtype = state.gtype[Uc]
+    new_gtype = gt[:B].astype(jnp.int8)
+    valid_row = (U < V)[:, None]
+    pair = old_gtype.astype(jnp.int32) * 5 + new_gtype.astype(jnp.int32)
+    changed = (old_gtype != new_gtype) & valid_row
+    trans = jnp.zeros((25,), jnp.int32).at[
+        jnp.where(changed, pair, 25)].add(1, mode="drop").reshape(5, 5)
+    return st, UpdateStats(n_ins, n_del, trans)

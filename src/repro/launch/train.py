@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.core.dyngraph import BingoConfig, from_edges
-from repro.core.updates import batched_update
+from repro.core.updates import make_updater
 from repro.data.pipeline import WalkCorpusPipeline
 from repro.graph.rmat import degree_bias, rmat_edges
 from repro.graph.streams import make_update_stream
@@ -59,8 +59,7 @@ def main():
                                 mode="mixed", seed=1)
     pipe = WalkCorpusPipeline(state, bcfg, walkers_per_round=512,
                               seq_len=args.seq_len, batch_size=args.batch)
-    upd = jax.jit(lambda s, i, u, v, ww: batched_update(
-        s, bcfg, i, u, v, ww)[0])
+    upd = make_updater(bcfg)   # donated: update rounds never copy tables
 
     # --- LM ------------------------------------------------------------------
     if args.arch:
@@ -94,10 +93,10 @@ def main():
     for step in range(start, args.steps):
         if step and step % args.update_every == 0 and \
                 round_i < stream.is_insert.shape[0]:
-            state = upd(state, jnp.asarray(stream.is_insert[round_i]),
-                        jnp.asarray(stream.u[round_i]),
-                        jnp.asarray(stream.v[round_i]),
-                        jnp.asarray(stream.w[round_i]))
+            state, _ = upd(state, jnp.asarray(stream.is_insert[round_i]),
+                           jnp.asarray(stream.u[round_i]),
+                           jnp.asarray(stream.v[round_i]),
+                           jnp.asarray(stream.w[round_i]))
             pipe.update_graph(state)
             round_i += 1
         batch = next(pipe)

@@ -15,11 +15,20 @@ Shapes: ``walk_step``  — one synchronous step of all walkers (sample +
         ``backend.sample_walk`` — one persistent megakernel launch on
         TPU — with no per-step exchange (the asynchronous-engine mode:
         walks stay shard-local, paths are gathered once at the end);
-        ``update_step`` — one batched graph update (100K updates).
+        ``update_step`` — one batched graph update (100K updates) through
+        ``backend.apply_updates`` (DESIGN.md §9);
+        ``update_walk`` — the streaming-serving round (DESIGN.md §9):
+        updates are routed to their owner shards (replicated batch +
+        ownership mask — each shard applies exactly the edges whose
+        source vertex it owns), then every shard immediately runs a
+        whole-walk batch on its freshly-updated rows.  "Mutate graph,
+        then walk" as one cell — on TPU, one update-megakernel launch
+        plus one walk-megakernel launch per shard.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -30,7 +39,6 @@ from repro.configs import bingo_walk
 from repro.core.backend import get_backend
 from repro.core.dyngraph import BingoConfig, BingoState
 from repro.core.alias import AliasTable
-from repro.core.updates import batched_update
 from repro.launch.specs import CellSpec
 
 __all__ = ["build_walk_cell"]
@@ -195,10 +203,13 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
 
     if shape_name == "update_step":
         Bu = wcfg.update_batch
+        engine = get_backend(bcfg.backend)
 
         def update_step(state, is_insert, u, v, w):
-            st, stats = batched_update(state, bcfg, is_insert, u, v, w)
-            return st, stats
+            # One batched §5.2 round through the EngineBackend — GSPMD
+            # partitions the reference path's whole-table scatters over
+            # the vertex shards; the pallas path is one megakernel.
+            return engine.apply_updates(state, bcfg, is_insert, u, v, w)
 
         upd_sds = (jax.ShapeDtypeStruct((Bu,), jnp.bool_),
                    jax.ShapeDtypeStruct((Bu,), jnp.int32),
@@ -215,6 +226,89 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
             out_shardings=(state_sh, None),
             donate_argnums=(0,),
             meta={"tokens": Bu, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    if shape_name == "update_walk":
+        from repro.core.walks import WalkParams
+        Bu = wcfg.update_batch
+        W = wcfg.walkers
+        L = wcfg.walk_length
+        num_shards = 1
+        for a in dp:
+            num_shards *= mesh.shape[a]
+        shard_size = wcfg.num_vertices // num_shards
+        lcfg = dataclasses.replace(bcfg, num_vertices=shard_size)
+        engine = get_backend(bcfg.backend)
+        wparams = WalkParams(kind="deepwalk", length=L)
+
+        # The streaming serving round (serve/dynwalk.py, distributed):
+        # the replicated update batch is routed to owner shards — each
+        # shard's active mask selects exactly the edges whose source
+        # vertex it owns (vertex-partitioned §9.1: updates move to the
+        # data, sampling structures never move) — applied through
+        # engine.apply_updates on the shard-local rows, then the shard
+        # walks its resident walkers through the fresh tables
+        # (walk_whole's shard-local adjacency view).  Per-shard
+        # UpdateStats are psum'd so the cell reports global counts.
+        def update_walk_local(state, is_insert, u, v, w, walkers, seed):
+            sidx = jax.lax.axis_index(dp[0])
+            for a in dp[1:]:
+                sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+            lo = sidx * shard_size
+            owned_u = (u >= lo) & (u < lo + shard_size)
+            lu = jnp.where(owned_u, u - lo, 0)
+            st, stats = engine.apply_updates(state, lcfg, is_insert, lu,
+                                             v, w, active=owned_u)
+            stats = jax.tree.map(
+                lambda t: jax.lax.psum(t, axis_name=dp), stats)
+            key = jax.random.fold_in(jax.random.key(seed[0]), sidx)
+            owned_n = (st.nbr >= lo) & (st.nbr < lo + shard_size)
+            view = st._replace(nbr=jnp.where(owned_n, st.nbr - lo, -1))
+            # Only live walkers resident on this shard walk; dead (-1)
+            # or foreign slots emit all -1 rather than a fabricated walk
+            # from a clamped vertex.  Paths are translated back to
+            # GLOBAL vertex ids so the P(dp)-concatenated output is
+            # directly consumable (walk_whole predates this and stays
+            # shard-local; the serving round's paths leave the cell).
+            resident = (walkers >= lo) & (walkers < lo + shard_size)
+            local = jnp.where(resident, walkers - lo, 0)
+            paths = engine.sample_walk(
+                view, lcfg, jnp.clip(local, 0, shard_size - 1), key,
+                wparams)
+            paths = jnp.where(resident[:, None] & (paths >= 0),
+                              paths + lo, -1)
+            return st, paths, stats
+
+        from jax.experimental.shard_map import shard_map
+        update_walk = shard_map(
+            update_walk_local, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(dp), sspecs,
+                                   is_leaf=lambda s: isinstance(s, P)),
+                      P(), P(), P(), P(), P(dp), P()),
+            out_specs=(jax.tree.map(lambda _: P(dp), sspecs,
+                                    is_leaf=lambda s: isinstance(s, P)),
+                       P(dp), P()),
+            check_rep=False)
+
+        upd_sds = (jax.ShapeDtypeStruct((Bu,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32))
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                                is_leaf=lambda s: isinstance(s, P))
+        rep = NamedSharding(mesh, P())
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=update_walk,
+            args_sds=(state_sds,) + upd_sds + (
+                jax.ShapeDtypeStruct((W,), jnp.int32),
+                jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(state_sh, rep, rep, rep, rep,
+                          NamedSharding(mesh, P(dp)), rep),
+            out_shardings=(state_sh, NamedSharding(mesh, P(dp)), None),
+            donate_argnums=(0,),
+            meta={"tokens": Bu + W * L,
+                  "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
         )
 
     raise ValueError(shape_name)

@@ -1,5 +1,8 @@
-"""Serving substrate: batched decode engine with continuous batching."""
+"""Serving substrate: batched LM decode engine with continuous batching,
+plus the streaming dynamic-walk engine (coalesced update rounds
+interleaved with whole-walk batches over one donated BingoState)."""
 
+from repro.serve.dynwalk import DynamicWalkEngine
 from repro.serve.engine import DecodeEngine, ServeRequest
 
-__all__ = ["DecodeEngine", "ServeRequest"]
+__all__ = ["DecodeEngine", "DynamicWalkEngine", "ServeRequest"]

@@ -1,0 +1,113 @@
+"""Streaming dynamic-walk serving: interleave update rounds with walks.
+
+The paper's principle (i) asks for "low-latency streaming updates AND
+high-throughput batched updates" feeding the same walk engine; systems
+like Wharf and FlexiWalker show that *update ingestion*, not sampling,
+decides whether a dynamic-walk engine is usable online.  This module is
+the serving loop for that regime: a ``DynamicWalkEngine`` owns one
+device-resident ``BingoState`` and threads it — donated, never copied —
+through alternating batched-update rounds and whole-walk batches, both
+dispatched through the configured ``EngineBackend`` (DESIGN.md §9):
+
+  * **updates** go through ``core/updates.py:make_updater`` — one jitted
+    ``apply_updates`` closure with ``donate_argnums=0``; on the pallas
+    backend every coalesced round is ONE update-megakernel launch
+    (``kernels/update_fused.py``) that mutates the HBM-resident tables
+    in place;
+  * **walks**   go through ``core/walks.py:make_walker`` — the same
+    donation contract; on the pallas backend deepwalk/ppr/simple are ONE
+    whole-walk megakernel launch each (``kernels/walk_fused.py``);
+  * **streams** arrive via ``graph/streams.py:rounds_on_device``, which
+    prefetches the numpy rounds onto the device ahead of use and can
+    coalesce several low-latency rounds into one §5.2 batched round —
+    the latency/throughput lever.
+
+This replaces the per-callsite ``jax.jit(batched_update)`` wrappers the
+launch/ layer used to carry: "mutate graph, then walk" is one engine
+object, and the state buffers are aliased across the whole session.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, BingoState
+from repro.core.updates import UpdateStats, make_updater
+from repro.core.walks import WalkParams, make_walker
+from repro.graph.streams import UpdateStream, rounds_on_device
+
+__all__ = ["DynamicWalkEngine"]
+
+
+class DynamicWalkEngine:
+    """One device-resident dynamic graph serving updates and walks.
+
+    The engine owns ``state``: both closures donate their state argument,
+    so after construction the caller must not hold (or re-use) the
+    original buffers — read ``engine.state`` instead.  ``ingest`` and
+    ``walk`` may be interleaved freely; each is one jitted call (one
+    megakernel launch each on the pallas backend).
+    """
+
+    def __init__(self, state: BingoState, cfg: BingoConfig,
+                 params: WalkParams = WalkParams(), *,
+                 backend: Optional[str] = None,
+                 whole_walk: Optional[bool] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self._state = state
+        self._update = make_updater(cfg, backend=backend)
+        self._walk = make_walker(state, cfg, params, backend=backend,
+                                 whole_walk=whole_walk)
+        self._key = jax.random.key(seed)
+        self.rounds_ingested = 0
+        self.updates_applied = 0
+        self.walks_served = 0
+
+    # -- state ownership -----------------------------------------------------
+    @property
+    def state(self) -> BingoState:
+        """The current sampling space (donated through every call)."""
+        return self._state
+
+    # -- serving surface -----------------------------------------------------
+    def ingest(self, is_insert, u, v, w) -> UpdateStats:
+        """Apply one batched update round; returns its ``UpdateStats``."""
+        self._state, stats = self._update(self._state, is_insert, u, v, w)
+        self.rounds_ingested += 1
+        self.updates_applied += int(u.shape[0])
+        return stats
+
+    def walk(self, starts, key=None):
+        """Serve one whole-walk batch; returns ``(B, length+1)`` paths."""
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        self._state, paths = self._walk(self._state, starts, key)
+        self.walks_served += int(starts.shape[0])
+        return paths
+
+    def run_stream(self, stream: UpdateStream, starts, *,
+                   coalesce: int = 1, prefetch: int = 2,
+                   walks_per_round: int = 1) -> Iterable:
+        """Drive a full update stream, walking between rounds.
+
+        Yields ``(round_index, UpdateStats, paths)`` per coalesced round
+        — ``paths`` stacks ``walks_per_round`` whole-walk batches from
+        ``starts``.  Rounds are uploaded ahead of use
+        (``rounds_on_device``), so ingestion overlaps the walks' device
+        time: the synchronous "integrate all updates before each walk"
+        contract of the paper's evaluation loop, without host stalls.
+        """
+        if walks_per_round < 1:
+            raise ValueError(   # ingest-only loops should call ingest()
+                f"walks_per_round must be >= 1; got {walks_per_round}")
+        starts = jnp.asarray(starts, jnp.int32)
+        for r, (ins, u, v, w) in enumerate(rounds_on_device(
+                stream, prefetch=prefetch, coalesce=coalesce)):
+            stats = self.ingest(ins, u, v, w)
+            paths = [self.walk(starts) for _ in range(walks_per_round)]
+            yield r, stats, jnp.stack(paths) if walks_per_round > 1 \
+                else paths[0]
