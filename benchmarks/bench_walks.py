@@ -1,18 +1,27 @@
-"""Walk throughput: whole-walk fused vs per-step pallas vs reference.
+"""Walk throughput: whole-walk fused vs per-step pallas vs reference,
+plus the sharded super-step relay.
 
-The perf baseline for the megakernel work (DESIGN.md §8): steps/second
-for each walk kind × sampling path, at laptop-scale shapes.  On this CPU
-container the pallas paths run in interpret mode, so the absolute
-numbers are a correctness-weighted smoke rather than a perf claim — the
-meaningful TPU signal is the *launch structure* (1 ``pallas_call`` for
-the fused path vs L for per-step, pinned by tests/test_kernels.py) —
-but the three paths are measured identically and the JSON snapshot
-(``BENCH_walks.json``, written by ``benchmarks/run.py``) gives future
-PRs a trend line.
+The perf baseline for the megakernel work (DESIGN.md §8/§10):
+steps/second for each walk kind × sampling path, at laptop-scale shapes.
+On this CPU container the pallas paths run in interpret mode, so the
+absolute numbers are a correctness-weighted smoke rather than a perf
+claim — the meaningful TPU signal is the *launch structure*
+(1 ``pallas_call`` for the fused path vs L for per-step, and 1 per shard
+per relay round, pinned by tests) — but every path is measured
+identically and the JSON snapshot (``BENCH_walks.json``, written by
+``benchmarks/run.py``) gives future PRs a trend line.  The ``relay``
+case runs the exact cross-shard walk over however many host devices
+exist (1 here; the walk-relay CI job fakes 8) — its gap to
+``pallas-fused`` is the price of resumability + routing.
 """
 
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import build_dataset, build_state, record, walk_rate
@@ -39,6 +48,32 @@ PATHS = {
 }
 
 
+def relay_rate(state, cfg, params, starts, *, seed: int = 0,
+               reps: int = 3) -> float:
+    """Steps/second of the sharded ``walk_relay`` path (DESIGN.md §10)
+    over all local devices — bit-identical output to ``pallas-fused``,
+    measured with the same jitted-call protocol."""
+    from repro.core.backend import get_backend
+    from repro.distributed.relay import make_relay
+    from repro.kernels.ops import seed_from_key
+
+    S = len(jax.devices())
+    if cfg.num_vertices % S or starts.shape[0] % S:
+        S = 1
+    mesh = jax.make_mesh((S,), ("data",))
+    relay = make_relay(get_backend("pallas"), cfg, params, mesh)
+    f = jax.jit(lambda st, wk, sd: relay(st, wk, sd)[0])
+    sd = seed_from_key(jax.random.key(seed))
+    jax.block_until_ready(f(state, starts, sd))     # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(state, starts, sd))
+        ts.append(time.perf_counter() - t0)
+    secs = float(np.median(ts))
+    return starts.shape[0] * params.length / max(secs, 1e-9)
+
+
 def main():
     V, src, dst, w = build_dataset(SCALE)
     st, cfg = build_state(V, src, dst, w, capacity=CAPACITY)
@@ -48,6 +83,8 @@ def main():
             rate = walk_rate(st, cfg, params, starts, backend=backend,
                              whole_walk=whole)
             record("walks", f"{kind}-{path}", "steps_per_sec", rate)
+        record("walks", f"{kind}-relay", "steps_per_sec",
+               relay_rate(st, cfg, params, starts))
 
 
 if __name__ == "__main__":

@@ -76,6 +76,43 @@ def _dry_fused_smoke() -> None:
     print("# dry: pallas whole-walk megakernel smoke ok (interpret mode)")
 
 
+def _dry_relay_smoke() -> None:
+    """Run the sharded walk_relay path once at toy scale over however
+    many host devices exist (1 on plain CI, 8 in the walk-relay job)
+    and assert it is BIT-IDENTICAL to the single-shard whole walk —
+    the DESIGN.md §10 exactness contract, end to end."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import walks
+    from repro.core.backend import get_backend
+    from repro.core.dyngraph import BingoConfig, from_edges
+    from repro.distributed.relay import make_relay
+    from repro.kernels.ops import seed_from_key
+
+    S = len(jax.devices())
+    V = 16 * S
+    src = np.arange(V, dtype=np.int32)
+    dst = (src + 1) % V                    # ring: crosses every boundary
+    cfg = BingoConfig(num_vertices=V, capacity=4, bias_bits=3)
+    st = from_edges(cfg, src, dst, np.ones(V, np.int32) * 3)
+    B, L = 8 * S, 5
+    starts = jnp.arange(B, dtype=jnp.int32) % V
+    key = jax.random.key(0)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, starts, key, params,
+                               backend="pallas", whole_walk=True)
+
+    mesh = jax.make_mesh((S,), ("data",))
+    relay = make_relay(get_backend("pallas"), cfg, params, mesh)
+    paths, rounds, ovf = relay(st, starts, seed_from_key(key))
+    assert np.array_equal(np.asarray(paths), np.asarray(single)), \
+        "relay != single-shard walk"
+    assert (np.asarray(paths) >= 0).all()   # ring never terminates
+    print(f"# dry: walk_relay bit-identical to single-shard walk "
+          f"({S} shard(s), {int(rounds)} round(s), overflow {int(ovf)})")
+
+
 def _dry_update_smoke() -> None:
     """Run one batched round through BOTH EngineBackends at toy scale and
     assert bit-identical states — the update megakernel path end to end
@@ -124,6 +161,7 @@ def main() -> None:
         print(f"# dry: engine backends {available_backends()}")
         _dry_fused_smoke()
         _dry_update_smoke()
+        _dry_relay_smoke()
         return
 
     print("bench,case,metric,value")

@@ -31,14 +31,27 @@ update path bit-exactly against ``core/updates.py:batched_update``.
 
 Beyond the per-step interface both builtins implement the *whole-walk*
 capability (DESIGN.md §8): ``sample_walk(state, cfg, starts, key,
-params)`` runs an entire L-step walk in one call — the reference backend
-via the ``core/walks.py`` scan, the pallas backend via the persistent
+params, u=None)`` runs an entire L-step walk in one call — the
+reference backend via the ``core/walks.py`` scan (or the fed-uniform
+jnp oracle when ``u`` is given), the pallas backend via the persistent
 megakernel (``kernels/walk_fused.py``) that keeps walker state in VMEM
 and issues a single ``pallas_call`` for all L steps.
 ``core/walks.py:random_walk`` dispatches whole-walk for
 deepwalk/ppr/simple whenever the resolved backend defines
 ``sample_walk`` (node2vec stays on the per-step proposal path — its
 Eq. 1 rejection needs the previous hop's rows).
+
+Both builtins also implement the *resumable segment* capability
+(DESIGN.md §10): ``sample_walk_segment(state, cfg, starts, t0, seed,
+params, u=None)`` runs one bulk-synchronous relay round — each walker
+enters at its own step ``t0``, draws the counter-based ``(seed,
+walker, t)`` uniform stream, and exits with a ``(vertex, step)``
+frontier record when it samples a remote (``-(g+2)``-encoded)
+neighbor.  The reference implementation is the windowed jnp scan
+(``kernels/ref.py:walk_segment_ref``), the pallas one the megakernel's
+``segment=True`` entry — bit-exact against each other, which is what
+lets ``launch/walk_cell.py:walk_relay`` stitch cross-shard whole walks
+that are bit-identical to the single-shard walk.
 
 ``SamplerBackend`` remains as an alias of ``EngineBackend`` for callers
 that only consume the sampling half of the protocol.
@@ -52,8 +65,11 @@ Registering a new backend:
         def sample_uniform(self, state, cfg, u, key): ...
         def apply_updates(self, state, cfg, is_insert, u, v, w,
                           active=None): ...
-        # optional whole-walk capability:
-        def sample_walk(self, state, cfg, starts, key, params): ...
+        # optional whole-walk / resumable-segment capabilities:
+        def sample_walk(self, state, cfg, starts, key, params,
+                        u=None): ...
+        def sample_walk_segment(self, state, cfg, starts, t0, seed,
+                                params, u=None): ...
 """
 
 from __future__ import annotations
@@ -92,10 +108,16 @@ class EngineBackend(Protocol):
 
     Backends may additionally implement the whole-walk capability
     ``sample_walk(state, cfg, starts (B,) int32, key, params:
-    WalkParams) -> (B, length+1) int32 path`` (column 0 = starts,
-    terminated walkers pad -1 — the ``random_walk`` contract);
-    ``random_walk`` prefers it over the per-step scan for
-    deepwalk/ppr/simple when present.
+    WalkParams, u=None) -> (B, length+1) int32 path`` (column 0 =
+    starts, terminated walkers pad -1 — the ``random_walk`` contract;
+    ``u`` (L, B, 6) optionally pins the exact uniform stream), and the
+    resumable-segment capability ``sample_walk_segment(state, cfg,
+    starts, t0, seed (1,) int32, params, u=None) -> (path (B, L+1),
+    frontier (B, 2))`` — one relay round over per-walker windows
+    [t0, exit) with the counter-based PRNG contract (DESIGN.md §10).
+    ``random_walk`` prefers ``sample_walk`` over the per-step scan for
+    deepwalk/ppr/simple when present; the distributed relay requires
+    ``sample_walk_segment``.
     """
 
     name: str
@@ -197,7 +219,7 @@ class PallasBackend:
         uu = jax.random.uniform(key, (u.shape[0], 1))
         return ops.walk_sample_uniform(state.nbr[u], state.deg[u], uu)
 
-    def sample_walk(self, state, cfg, starts, key, params):
+    def sample_walk(self, state, cfg, starts, key, params, u=None):
         from repro.core import walks
         if params.kind == "node2vec":
             # Second-order rejection reads the previous hop's rows — stays
@@ -207,9 +229,25 @@ class PallasBackend:
         stop = float(params.stop_prob) if params.kind == "ppr" else 0.0
         return ops.walk_fused(
             state.itable.prob, state.itable.alias, state.bias, state.nbr,
-            state.deg, state.frac if cfg.fp_bias else None, starts, key,
+            state.deg, state.frac if cfg.fp_bias else None, starts, key, u,
             length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
             uniform=params.kind == "simple")
+
+    def sample_walk_segment(self, state, cfg, starts, t0, seed, params,
+                            u=None):
+        """One relay round through the megakernel's resumable entry
+        (DESIGN.md §10).  ``seed`` is the raw (1,) int32 PRNG seed
+        (``ops.seed_from_key``) shared across shards and rounds."""
+        if params.kind == "node2vec":
+            raise ValueError(
+                "node2vec has no segment path (per-step only, DESIGN.md §8)")
+        from repro.kernels import ops
+        stop = float(params.stop_prob) if params.kind == "ppr" else 0.0
+        return ops.walk_segment(
+            state.itable.prob, state.itable.alias, state.bias, state.nbr,
+            state.deg, state.frac if cfg.fp_bias else None, starts, t0,
+            seed, u, length=params.length, base_log2=cfg.base_log2,
+            stop_prob=stop, uniform=params.kind == "simple")
 
     def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
         from repro.kernels import ops

@@ -169,11 +169,39 @@ class ReferenceBackend:
             (jax.random.uniform(key, (B,)) * dg).astype(jnp.int32), dg - 1)
         return state.nbr[u, j], j
 
-    def sample_walk(self, state, cfg, starts, key, params):
+    def sample_walk(self, state, cfg, starts, key, params, u=None):
         """Whole walk as the per-step ``lax.scan`` — the jnp reference
-        for the pallas megakernel (``core/walks.py:scan_walk``)."""
+        for the pallas megakernel (``core/walks.py:scan_walk``).  With
+        fed uniforms ``u`` (L, B, 6) it switches to the fed-uniform jnp
+        oracle (``kernels/ref.py:walk_fused_ref``) so reference and
+        pallas whole walks draw the *identical* stream — the relay
+        bit-equality tests pin both against the sharded path."""
         from repro.core import walks   # runtime import: walks imports us
-        return walks.scan_walk(self, state, cfg, starts, key, params)
+        if u is None or params.kind == "node2vec":
+            return walks.scan_walk(self, state, cfg, starts, key, params)
+        from repro.kernels import ref
+        stop = float(params.stop_prob) if params.kind == "ppr" else 0.0
+        return ref.walk_fused_ref(
+            state.itable.prob, state.itable.alias, state.bias, state.nbr,
+            state.deg, state.frac if cfg.fp_bias else None, starts, u,
+            base_log2=cfg.base_log2, stop_prob=stop,
+            uniform=params.kind == "simple")
+
+    def sample_walk_segment(self, state, cfg, starts, t0, seed, params,
+                            u=None):
+        """One relay round as the windowed jnp scan — bit-exact against
+        the pallas megakernel's ``segment=True`` entry in both the fed-
+        uniform and counter-based hash PRNG modes (DESIGN.md §10)."""
+        if params.kind == "node2vec":
+            raise ValueError(
+                "node2vec has no segment path (per-step only, DESIGN.md §8)")
+        from repro.kernels import ref
+        stop = float(params.stop_prob) if params.kind == "ppr" else 0.0
+        return ref.walk_segment_ref(
+            state.itable.prob, state.itable.alias, state.bias, state.nbr,
+            state.deg, state.frac if cfg.fp_bias else None, starts, t0, u,
+            length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
+            uniform=params.kind == "simple", seed=seed)
 
     def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
         """Batched §5.2 round via the whole-table jnp pipeline — the

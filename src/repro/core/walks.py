@@ -175,7 +175,7 @@ def scan_walk(bk, state: BingoState, cfg: BingoConfig, starts, key,
 
 def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
                 params: WalkParams, backend: Optional[str] = None,
-                whole_walk: Optional[bool] = None):
+                whole_walk: Optional[bool] = None, uniforms=None):
     """Run a batch of walks; returns ``(B, length + 1)`` int32 paths.
 
     Column 0 holds the start vertices; terminated walkers pad with -1.
@@ -191,12 +191,25 @@ def random_walk(state: BingoState, cfg: BingoConfig, starts, key,
     (its Eq. 1 rejection needs the previous hop's rows).  Force with
     ``whole_walk=True`` (raises if the backend can't) or pin the
     per-step path with ``whole_walk=False`` (benchmark comparisons).
+
+    ``uniforms`` (L, B, 6) float32 pins the exact per-(walker, step)
+    uniform stream (DESIGN.md §10): both builtin backends then draw
+    identical samples — on *any* sharding, which is how the relay tests
+    assert a sharded ``walk_relay`` bit-equals this single-shard call.
+    Only the whole-walk kinds accept it (the per-step scan and node2vec
+    draw through JAX keys).
     """
     bk = get_backend(cfg.backend if backend is None else backend)
     can_whole = hasattr(bk, "sample_walk")
     if whole_walk is True and not can_whole:
         raise ValueError(
             f"backend {bk.name!r} has no sample_walk whole-walk support")
+    if uniforms is not None:
+        if params.kind == "node2vec" or whole_walk is False or not can_whole:
+            raise ValueError(
+                "fed uniforms require the whole-walk path "
+                "(deepwalk/ppr/simple through sample_walk)")
+        return bk.sample_walk(state, cfg, starts, key, params, u=uniforms)
     if whole_walk is not False and can_whole and params.kind != "node2vec":
         return bk.sample_walk(state, cfg, starts, key, params)
     return scan_walk(bk, state, cfg, starts, key, params)

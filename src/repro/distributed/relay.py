@@ -1,0 +1,217 @@
+"""Bulk-synchronous walker relay: exact cross-shard whole walks.
+
+The whole-walk megakernel walks shard-locally; before this module, a
+walker whose next hop left its shard was silently truncated
+(the old DESIGN.md §8 trade).  The relay closes that gap with the
+KnightKing/ThunderRW walker-centric discipline on the §9.1 vertex
+partition (DESIGN.md §10): walkers move between owners in bulk
+*super-steps* while the sampling structures never move.
+
+One round, per shard, inside ``shard_map``:
+
+  1. **segment** — run the resumable megakernel
+     (``EngineBackend.sample_walk_segment``) over the shard's resident
+     walkers: each enters at its own step ``t0`` and walks until it
+     finishes or samples a remote neighbor (encoded ``-(g + 2)`` by
+     ``relay_view``), exiting with a ``(vertex, step)`` frontier record;
+  2. **merge** — the segment's path columns are scattered into the
+     walker's *originating* row of a (W, L+1) accumulator (slot == wid
+     by construction, so the scatter is the identity placement; columns
+     outside the segment window are -1 and merge by ``maximum``);
+  3. **route** — frontier records (plus any mailbox leftovers from the
+     previous round) ride one ``exchange_walkers`` all_to_all as
+     ``(vertex, step, slot)`` payloads; overflow beyond a mailbox cap is
+     returned to the sender and re-enqueued next round — no walker is
+     ever dropped;
+  4. **place** — arrivals land in their wid-indexed slot with
+     ``t0 = step``, becoming next round's residents.
+
+The loop runs until no walker is resident, in flight, or left over
+anywhere (a psum'd count), bounded by ``max_rounds``.  Because the
+per-(walker, t) uniform stream is a pure hash of ``(seed, wid, t)``
+(``kernels/walk_fused.py:uniforms_at``) — or fed explicitly — a resumed
+walker draws exactly what it would have drawn locally, so the stitched
+(W, L+1) paths are *bit-identical* to the single-shard
+``random_walk`` at any shard count (``tests/test_walk_relay.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.walker_exchange import exchange_walkers
+
+__all__ = ["relay_view", "relay_local", "make_relay", "shard_index"]
+
+
+def shard_index(mesh):
+    """This shard's linear index over ALL mesh axes (inside shard_map)."""
+    axes = tuple(mesh.axis_names)
+    s = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        s = s * mesh.shape[a] + jax.lax.axis_index(a)
+    return s
+
+
+def relay_view(state, lo: int, shard_size: int):
+    """Shard-local adjacency view that *keeps* remote neighbors.
+
+    Owned neighbors ``[lo, lo + shard_size)`` become local row ids;
+    remote ones are encoded ``-(g + 2)`` so the segment kernel can emit
+    them as frontier records (-1 padding stays -1).  Contrast with the
+    ``walk_whole`` cell's truncating view, which maps remote to -1 and
+    ends the walk there."""
+    owned = (state.nbr >= lo) & (state.nbr < lo + shard_size)
+    enc = jnp.where(state.nbr < 0, state.nbr, -(state.nbr + 2))
+    return state._replace(nbr=jnp.where(owned, state.nbr - lo, enc))
+
+
+def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
+                sidx, num_shards: int, shard_size: int, axis,
+                mailbox_cap: int | None = None,
+                max_rounds: int | None = None):
+    """Per-shard body of the super-step relay (call inside shard_map).
+
+    ``bk``/``lcfg``/``params`` — an ``EngineBackend`` with
+    ``sample_walk_segment``, the shard-local config
+    (``num_vertices == shard_size``), and the walk params
+    (deepwalk/ppr/simple); ``state`` — this shard's vertex slice of the
+    ``BingoState`` (adjacency still holding *global* neighbor ids);
+    ``walkers`` (W,) int32 — global start vertices, replicated (each
+    shard adopts its residents); ``seed`` (1,) int32 — the shared
+    counter-PRNG seed (``ops.seed_from_key``); ``u`` — optional
+    (L, W, 6) fed uniforms, replicated.
+
+    Returns ``(paths (W//num_shards, L+1) int32, rounds, overflow)`` —
+    this shard's block of the stitched global path array (vertex ids
+    global, the ``random_walk`` contract), the number of relay rounds
+    executed, and the total mailbox-overflow re-enqueues observed
+    (both replicated scalars).
+    """
+    W = walkers.shape[0]
+    L = params.length
+    if W % num_shards:
+        # The stitched output is reassembled from per-shard (W // S)
+        # blocks; a ragged W would silently drop the tail walkers.
+        raise ValueError(
+            f"walker count {W} must divide over {num_shards} shards "
+            f"(pad starts with -1 free slots)")
+    if max_rounds is None:
+        # Safety bound only — the loop exits when nothing is pending.
+        # Every round with pending work delivers >= 1 mailbox record or
+        # advances >= 1 resident walker, and a walker consumes at most
+        # L crossings + L steps, so W * L * 2 rounds covers even a
+        # cap=1 mailbox funneling every record one at a time (the
+        # ping-pong worst case without overflow needs exactly L).
+        max_rounds = 2 * W * L + 4
+    lo = sidx * shard_size
+    view = relay_view(state, lo, shard_size)
+    wid = jnp.arange(W, dtype=jnp.int32)
+
+    resident0 = (walkers >= 0) & (walkers // shard_size == sidx)
+    cur0 = jnp.where(resident0, walkers - lo, -1)
+    t00 = jnp.zeros((W,), jnp.int32)
+    leftover0 = jnp.full((W, 3), -1, jnp.int32)
+    acc0 = jnp.full((W, L + 1), -1, jnp.int32)
+    pending0 = jax.lax.psum(resident0.sum(dtype=jnp.int32), axis_name=axis)
+
+    def cond(c):
+        r, _cur, _t0, _left, _acc, _ovf, pending = c
+        return (pending > 0) & (r < max_rounds)
+
+    def body(c):
+        r, cur, t0, leftover, acc, ovf, _pending = c
+        paths, frontier = bk.sample_walk_segment(
+            view, lcfg, cur, t0, seed, params, u=u)
+        # merge into the originating rows (slot == wid): local ids back
+        # to global, -1 stays -1, and jnp.maximum stitches disjoint
+        # segment windows (vertex ids are >= 0 wherever written).
+        acc = jnp.maximum(acc, jnp.where(paths >= 0, paths + lo, -1))
+        # outgoing (vertex, step, slot) records; rows are disjoint from
+        # leftovers by construction (a leftover walker was not resident,
+        # so its frontier row is empty).
+        out_pay = jnp.stack(
+            [frontier[:, 0], frontier[:, 1], wid], axis=-1)
+        out_pay = jnp.where(frontier[:, 0:1] >= 0, out_pay, -1)
+        pend = jnp.where(leftover[:, 0:1] >= 0, leftover, out_pay)
+        arrived, spill, spilled = exchange_walkers(
+            pend, shard_size, num_shards, axis, cap=mailbox_cap)
+        # exchange returns spilled rows in sort order; re-key them by
+        # their slot field so next round's merge with fresh frontier
+        # records stays disjoint per walker.
+        s_ok = spill[:, 0] >= 0
+        leftover2 = jnp.full((W, 3), -1, jnp.int32).at[
+            jnp.where(s_ok, spill[:, 2], W)].set(spill, mode="drop")
+        # place arrivals: walker `slot` resumes at vertex - lo, step t.
+        a_ok = arrived[:, 0] >= 0
+        a_slot = jnp.where(a_ok, arrived[:, 2], W)
+        cur2 = jnp.full((W,), -1, jnp.int32).at[a_slot].set(
+            jnp.where(a_ok, arrived[:, 0] - lo, 0), mode="drop")
+        t02 = jnp.zeros((W,), jnp.int32).at[a_slot].set(
+            jnp.where(a_ok, arrived[:, 1], 0), mode="drop")
+        pending = jax.lax.psum(
+            (cur2 >= 0).sum(dtype=jnp.int32)
+            + (leftover2[:, 0] >= 0).sum(dtype=jnp.int32), axis_name=axis)
+        ovf = ovf + jax.lax.psum(spilled, axis_name=axis)
+        return r + 1, cur2, t02, leftover2, acc, ovf, pending
+
+    rounds, _, _, _, acc, ovf, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), cur0, t00, leftover0, acc0, jnp.int32(0), pending0))
+
+    # one coherent (W, L+1) array: every shard contributes the columns it
+    # walked; element-wise max over shards stitches them, and this shard
+    # returns its wid block (shard_map reassembles the P(axis) output).
+    acc = jax.lax.pmax(acc, axis_name=axis)
+    Wb = W // num_shards
+    block = jax.lax.dynamic_slice(acc, (sidx * Wb, 0), (Wb, L + 1))
+    return block, rounds, ovf
+
+
+def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
+               max_rounds: int | None = None):
+    """Build the shard_mapped relay: the one wrapper every layer shares.
+
+    Vertex-shards ``cfg.num_vertices`` over ALL of ``mesh``'s axes and
+    returns ``run(state, walkers, seed, u=None) -> (paths (W, L+1),
+    rounds, overflow)`` — ``state`` a vertex-sharded (or logically
+    shardable) ``BingoState``, ``walkers`` (W,) int32 global start
+    vertices replicated (-1 = free slot; W must divide over the shard
+    count), ``seed`` (1,) int32 (``ops.seed_from_key``), ``u`` optional
+    (L, W, 6) fed uniforms.  Used by the ``walk_relay`` launch cell, the
+    sharded ``DynamicWalkEngine``, benchmarks and tests, so the
+    divisibility validation and spec plumbing live in exactly one place.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(mesh.axis_names)
+    num_shards = 1
+    for a in axes:
+        num_shards *= mesh.shape[a]
+    if cfg.num_vertices % num_shards:
+        raise ValueError(
+            f"num_vertices {cfg.num_vertices} must divide over "
+            f"{num_shards} shards (pad the vertex space)")
+    shard_size = cfg.num_vertices // num_shards
+    lcfg = dataclasses.replace(cfg, num_vertices=shard_size)
+
+    def local(state, walkers, seed, *rest):
+        return relay_local(
+            bk, lcfg, params, state, walkers, seed,
+            rest[0] if rest else None, sidx=shard_index(mesh),
+            num_shards=num_shards, shard_size=shard_size, axis=axes,
+            mailbox_cap=mailbox_cap, max_rounds=max_rounds)
+
+    def run(state, walkers, seed, u=None):
+        sspec = jax.tree.map(lambda _: P(axes), state)
+        in_specs = (sspec, P(), P()) + (() if u is None else (P(),))
+        f = shard_map(local, mesh=mesh, in_specs=in_specs,
+                      out_specs=(P(axes), P(), P()), check_rep=False)
+        args = (state, walkers, seed) + (() if u is None else (u,))
+        return f(*args)
+
+    return run

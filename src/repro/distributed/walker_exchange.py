@@ -9,11 +9,18 @@ choice; P2P GPU copies become ICI all-to-all).
 ``shard_map`` keeps the per-shard view explicit: each shard sorts its
 outgoing walkers by destination shard into fixed-size mailboxes, the
 all_to_all rotates mailboxes, and arrivals are compacted locally.
+
+Payloads are multi-field rows: the relay (DESIGN.md §10) ships
+``(vertex, step, slot)`` records so a walker resumes exactly where it
+left off, and the per-step engine ships ``(vertex, walker-id)`` so hops
+keep their walker identity across shards.  Mailbox overflow is *never*
+a silent drop: entries beyond a destination's capacity are returned to
+the sender (``leftover``) with an overflow count, and the relay
+re-enqueues them next round — conservation is exact
+(``tests/test_distributed.py``).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -22,50 +29,87 @@ from jax.sharding import PartitionSpec as P
 __all__ = ["exchange_walkers", "make_walk_step"]
 
 
-def exchange_walkers(walkers, shard_size: int, num_shards: int,
-                     axis: str = "data"):
-    """Route walkers to their owning shard (inside shard_map).
+def exchange_walkers(payload, shard_size: int, num_shards: int,
+                     axis: str = "data", cap: int | None = None):
+    """Route walker records to their owning shard (inside shard_map).
 
-    ``walkers`` (Wl,) int32 global vertex ids held by this shard (-1 =
-    inactive).  Returns the same-size mailbox of walkers this shard owns
-    after routing; overflow beyond Wl/num_shards per destination pair is
-    dropped (sized so overflow is statistically negligible — the paper's
-    mailbox buffers have the same property).
+    ``payload`` is (Wl,) int32 global vertex ids or (Wl, F) int32 rows
+    whose field 0 is the destination vertex (-1 marks an empty row).
+    Each (sender, destination) pair has a mailbox of ``cap`` rows
+    (default ``Wl // num_shards``); one ``all_to_all`` rotates the
+    mailboxes.  Returns ``(arrived, leftover, overflow)``:
+
+      * ``arrived``  — (num_shards * cap[, F]) rows this shard owns
+        after routing (-1 gaps);
+      * ``leftover`` — same shape as ``payload``: the rows that were NOT
+        delivered — mailbox overflow beyond ``cap``, plus any row whose
+        destination vertex falls outside ``[0, num_shards *
+        shard_size)`` and so has no owner — kept on the *sender* so
+        callers can re-enqueue (the relay does, every round) or flag
+        them.  Nothing is ever dropped: ``arrived ∪ leftover`` over all
+        shards is exactly the sent multiset;
+      * ``overflow`` — scalar int32 count of this shard's leftover rows.
     """
-    Wl = walkers.shape[0]
-    cap = Wl // num_shards
-    dest = jnp.where(walkers >= 0, walkers // shard_size, num_shards)
+    squeeze = payload.ndim == 1
+    if squeeze:
+        payload = payload[:, None]
+    Wl, F = payload.shape
+    if cap is None:
+        cap = max(1, Wl // num_shards)
+    elif cap < 1:
+        raise ValueError(f"mailbox cap must be >= 1; got {cap}")
+    v = payload[:, 0]
+    dest = jnp.where(v >= 0, v // shard_size, num_shards)
     order = jnp.argsort(dest)
-    w_sorted = walkers[order]
+    p_sorted = payload[order]
     d_sorted = dest[order]
     idx = jnp.arange(Wl, dtype=jnp.int32)
     first = jnp.concatenate([jnp.ones((1,), bool),
                              d_sorted[1:] != d_sorted[:-1]])
     rank = idx - jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
-    slot = jnp.where((d_sorted < num_shards) & (rank < cap),
-                     d_sorted * cap + rank, num_shards * cap)
-    mailbox = jnp.full((num_shards * cap + 1,), -1, jnp.int32)
-    mailbox = mailbox.at[slot].set(w_sorted, mode="drop")[:-1]
-    mailbox = mailbox.reshape(num_shards, cap)
+    live = p_sorted[:, 0] >= 0
+    routed = live & (d_sorted < num_shards) & (rank < cap)
+    slot = jnp.where(routed, d_sorted * cap + rank, num_shards * cap)
+    mailbox = jnp.full((num_shards * cap + 1, F), -1, jnp.int32)
+    mailbox = mailbox.at[slot].set(p_sorted, mode="drop")[:-1]
+    mailbox = mailbox.reshape(num_shards, cap, F)
     arrived = jax.lax.all_to_all(mailbox, axis, 0, 0, tiled=False)
-    return arrived.reshape(num_shards * cap)
+    arrived = arrived.reshape(num_shards * cap, F)
+    spill = live & ~routed
+    leftover = jnp.where(spill[:, None], p_sorted, -1)
+    overflow = spill.sum(dtype=jnp.int32)
+    if squeeze:
+        return arrived[:, 0], leftover[:, 0], overflow
+    return arrived, leftover, overflow
 
 
 def make_walk_step(sample_local, shard_size: int, num_shards: int,
                    mesh, axis: str = "data"):
-    """Build a shard_mapped distributed walk step.
+    """Build a shard_mapped distributed walk step that keeps identity.
 
-    ``sample_local(walkers_local, key) -> next_global_vertex`` samples the
-    next hop for walkers whose *current* vertex lives on this shard
-    (callers close over the vertex-sharded BingoState).
+    ``sample_local(vertices_local, key) -> next_global_vertex`` samples
+    the next hop for walkers whose *current* vertex lives on this shard
+    (callers close over the vertex-sharded BingoState).  The step state
+    is (Wl, 2) int32 ``[global vertex, walker id]`` rows (-1 rows are
+    empty): the id field rides the mailbox with the vertex, so a hop
+    arriving on another shard still knows *which* walker it advances —
+    the per-step twin of the relay's ``(vertex, step, slot)`` payload.
+    Mailbox leftovers are returned alongside so callers can re-enqueue
+    (a bare step has no next round to retry in).
     """
     def step(walkers, key):
-        nxt = sample_local(walkers, key)
-        return exchange_walkers(nxt, shard_size, num_shards, axis)
+        nxt = sample_local(walkers[:, 0], key)
+        live = (walkers[:, 0] >= 0) & (nxt >= 0)
+        payload = jnp.stack(
+            [jnp.where(live, nxt, -1), jnp.where(live, walkers[:, 1], -1)],
+            axis=-1)
+        arrived, leftover, overflow = exchange_walkers(
+            payload, shard_size, num_shards, axis)
+        return arrived, leftover, overflow
 
     return jax.experimental.shard_map.shard_map(
         step, mesh=mesh,
         in_specs=(P(axis), P()),
-        out_specs=P(axis),
+        out_specs=(P(axis), P(axis), P()),
         check_rep=False,
     )

@@ -10,6 +10,9 @@ Kernels:
   * ``walk_fused``      — persistent whole-walk megakernel: the entire
     L-step walk in ONE launch, tables HBM-resident, per-step row DMAs
     double-buffered into VMEM (DESIGN.md §8 — the production walk path);
+    its ``segment=True`` entry resumes walkers mid-walk with per-walker
+    start steps and (vertex, step) frontier exits — the super-step
+    relay's building block (``walk_segment``, DESIGN.md §10);
   * ``update_fused``    — batched-update megakernel: one §5.2
     insert→two-phase-delete→rebuild round in ONE launch, tables
     HBM-resident and aliased in place, affected rows DMA'd through
@@ -28,8 +31,8 @@ Kernels:
 
 from repro.kernels.ops import (alias_build, flash_attention, radix_hist,
                                update_fused, walk_fused, walk_sample,
-                               walk_sample_uniform)
+                               walk_sample_uniform, walk_segment)
 
-__all__ = ["walk_fused", "update_fused", "walk_sample",
+__all__ = ["walk_fused", "walk_segment", "update_fused", "walk_sample",
            "walk_sample_uniform", "alias_build", "radix_hist",
            "flash_attention"]

@@ -16,13 +16,13 @@ from repro.kernels.alias_build import alias_build_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
 from repro.kernels.update_fused import update_fused_pallas
-from repro.kernels.walk_fused import NUM_UNIFORMS, walk_fused_pallas
+from repro.kernels.walk_fused import walk_fused_pallas
 from repro.kernels.walk_sample import (walk_sample_pallas,
                                        walk_sample_uniform_pallas)
 
 __all__ = ["walk_sample", "walk_sample_uniform", "walk_fused",
-           "update_fused", "alias_build", "radix_hist", "flash_attention",
-           "on_tpu"]
+           "walk_segment", "seed_from_key", "update_fused", "alias_build",
+           "radix_hist", "flash_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -63,33 +63,69 @@ def walk_sample_uniform(nbr, deg, u, *, force_ref: bool = False):
     return walk_sample_uniform_pallas(nbr, deg, u, interpret=not on_tpu())
 
 
-def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, *,
+def seed_from_key(key):
+    """Derive the (1,) int32 seed of the counter-based walk PRNG from a
+    JAX PRNG key.  One shared derivation so every path — megakernel,
+    segment kernel, jnp oracles, the sharded relay — draws the *same*
+    ``(seed, walker, t)`` uniform stream for the same key."""
+    return jax.random.randint(key, (1,), 0, jnp.iinfo(jnp.int32).max,
+                              dtype=jnp.int32)
+
+
+def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, u=None, *,
                length: int, base_log2: int = 1, stop_prob: float = 0.0,
                uniform: bool = False, force_ref: bool = False,
                block_b: int = 256):
     """Whole-walk entry: one resident megakernel launch for all L steps.
 
     Tables are the full ``BingoState`` arrays (see
-    ``kernels/walk_fused.py``).  On TPU, uniforms come from the in-kernel
-    PRNG seeded from ``key`` (no (L, B, 6) HBM buffer at production
-    scale); elsewhere (interpret mode has no TPU PRNG lowering) — and on
-    the ``force_ref`` roofline path, where HLO cost analysis needs real
-    FLOPs — they are precomputed from the same key, so a given key is
-    replayable on every path.  Returns the (B, length+1) int32 path.
+    ``kernels/walk_fused.py``).  Uniforms come from the counter-based
+    ``(seed, walker, t)`` hash (``walk_fused.uniforms_at``) with the
+    seed derived from ``key`` — no (L, B, 6) HBM buffer at production
+    scale, the same stream on every path (compiled TPU, interpret mode,
+    and the ``force_ref`` jnp oracle — where HLO cost analysis needs
+    real FLOPs), and the same stream a relay-resumed segment of this
+    walk would draw on another shard (DESIGN.md §10).  Pass ``u``
+    (L, B, 6) to pin an explicit stream instead.  Returns the
+    (B, length+1) int32 path.
     """
-    k_seed, k_u = jax.random.split(key)
-    seed = jax.random.randint(k_seed, (1,), 0, jnp.iinfo(jnp.int32).max,
-                              dtype=jnp.int32)
-    u = None
-    if force_ref or not on_tpu():
-        u = jax.random.uniform(k_u, (length, starts.shape[0], NUM_UNIFORMS))
+    seed = seed_from_key(key)
     if force_ref:
         return _ref.walk_fused_ref(prob, alias, bias, nbr, deg, frac,
                                    starts, u, base_log2=base_log2,
-                                   stop_prob=stop_prob, uniform=uniform)
+                                   stop_prob=stop_prob, uniform=uniform,
+                                   seed=seed, length=length)
     return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
                              seed, u, length=length, base_log2=base_log2,
                              stop_prob=stop_prob, uniform=uniform,
+                             block_b=block_b, interpret=not on_tpu())
+
+
+def walk_segment(prob, alias, bias, nbr, deg, frac, starts, t0, seed,
+                 u=None, *, length: int, base_log2: int = 1,
+                 stop_prob: float = 0.0, uniform: bool = False,
+                 force_ref: bool = False, block_b: int = 256):
+    """Resumable walk segment: the relay's per-round kernel entry.
+
+    Same tables as ``walk_fused`` but with per-walker start steps ``t0``
+    (B,) int32, free slots marked ``starts < 0``, and remote neighbors
+    encoded ``-(g + 2)`` in ``nbr`` — walkers that sample one exit with
+    a ``(vertex, step)`` frontier record (DESIGN.md §10).  ``seed`` is
+    the raw (1,) int32 PRNG seed (``seed_from_key``), NOT a JAX key:
+    the relay threads one seed through every shard and round so resumed
+    walkers keep their stream.  Returns ``(path (B, length+1),
+    frontier (B, 2))``.
+    """
+    if force_ref:
+        return _ref.walk_segment_ref(prob, alias, bias, nbr, deg, frac,
+                                     starts, t0, u, length=length,
+                                     base_log2=base_log2,
+                                     stop_prob=stop_prob, uniform=uniform,
+                                     seed=seed)
+    return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
+                             seed, u, t0, length=length,
+                             base_log2=base_log2, stop_prob=stop_prob,
+                             uniform=uniform, segment=True,
                              block_b=block_b, interpret=not on_tpu())
 
 

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["walk_sample_ref", "walk_sample_uniform_ref", "walk_fused_ref",
+           "walk_segment_ref", "hash_uniforms_ref",
            "alias_build_ref", "radix_hist_ref", "attention_ref"]
 
 
@@ -115,26 +116,41 @@ def walk_sample_uniform_ref(nbr, deg, u0):
     return jnp.where(ok, nxt, -1), jnp.where(ok, slot, -1)
 
 
-def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u, *,
+def hash_uniforms_ref(seed, length: int, B: int):
+    """Materialized (L, B, 6) counter-based uniforms — the exact stream
+    the megakernel draws on the fly (``walk_fused.uniforms_at`` with
+    walker id = batch row), for oracles that scan over fed arrays."""
+    from repro.kernels.walk_fused import uniforms_at
+    wid = jnp.arange(B, dtype=jnp.int32)[None, :, None]
+    ts = jnp.arange(length, dtype=jnp.int32)[:, None, None]
+    return uniforms_at(seed[0] if seed.ndim else seed, wid, ts)
+
+
+def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u=None, *,
                    base_log2: int = 1, stop_prob: float = 0.0,
-                   uniform: bool = False):
-    """Whole-walk oracle: the L-step scan under *fed* uniforms.
+                   uniform: bool = False, seed=None, length=None):
+    """Whole-walk oracle: the L-step scan under fed (or hashed) uniforms.
 
     The pure-jnp ground truth for ``kernels/walk_fused.py`` — same
     (L, B, 6) uniform columns (alias bucket, alias coin, member pick,
     acceptance coin, ITS position, PPR stop coin), same per-step alive
     semantics as ``core/walks.py:scan_walk``, with each step's sample
     drawn by ``walk_sample_ref`` (or the degree pick for
-    ``uniform=True``) on rows gathered in HBM.  Bit-exact against the
-    megakernel in interpret mode; also the roofline/cost-analysis stand-
-    in (``ops.walk_fused(force_ref=True)``) since Pallas bodies are
-    opaque to HLO cost analysis.  Returns the (B, L+1) int32 path.
+    ``uniform=True``) on rows gathered in HBM.  When ``u`` is None the
+    uniforms are the counter-based ``(seed, walker, t)`` hash stream
+    (``hash_uniforms_ref``) — bit-identical to what the megakernel
+    draws in hash mode, so kernel == oracle holds on both PRNG paths.
+    Also the roofline/cost-analysis stand-in
+    (``ops.walk_fused(force_ref=True)``) since Pallas bodies are opaque
+    to HLO cost analysis.  Returns the (B, L+1) int32 path.
     """
+    B = starts.shape[0]
+    if u is None:
+        u = hash_uniforms_ref(seed, length, B)
     if u.shape[-1] < 6:
         raise ValueError(
             f"fed uniforms must be (L, B, 6); got {u.shape}")
     V = nbr.shape[0]
-    B = starts.shape[0]
 
     def step(carry, ut):
         cur, alive = carry
@@ -159,6 +175,73 @@ def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u, *,
         step, (starts, jnp.ones((B,), bool)), u)
     return jnp.concatenate([starts[:, None], jnp.swapaxes(path, 0, 1)],
                            axis=1)
+
+
+def walk_segment_ref(prob, alias, bias, nbr, deg, frac, starts, t0,
+                     u=None, *, length: int, base_log2: int = 1,
+                     stop_prob: float = 0.0, uniform: bool = False,
+                     seed=None):
+    """Resumable-segment oracle (DESIGN.md §10): windowed L-step scan.
+
+    The pure-jnp ground truth for the megakernel's ``segment=True``
+    entry.  Per walker: idle until step ``t0`` (start vertex written at
+    path column ``t0``, earlier columns -1), walk with the exact
+    ``walk_sample_ref`` step until the walk ends or a *remote* neighbor
+    (adjacency value ``-(g + 2)``) is sampled — the walker then exits
+    with a ``(g, step)`` frontier record.  ``starts < 0`` marks free
+    slots.  Uniforms per step t come from ``u[t]`` when fed, else from
+    the counter-based ``(seed, walker row, t)`` hash — identical columns
+    and semantics to the kernel, bit-exact in both modes.  Returns
+    ``(path (B, L+1), frontier (B, 2))``.
+    """
+    B = starts.shape[0]
+    L = length
+    if u is None:
+        u = hash_uniforms_ref(seed, L, B)
+    if u.shape[-1] < 6:
+        raise ValueError(
+            f"fed uniforms must be (L, B, 6); got {u.shape}")
+    V = nbr.shape[0]
+    occupied = (starts >= 0) & (t0 <= L)
+    alive0 = occupied & (t0 == 0)
+
+    def step(carry, xs):
+        t, ut = xs
+        cur, alive, fv, ft = carry
+        safe = jnp.clip(cur, 0, V - 1)
+        d = deg[safe]
+        if uniform:
+            nxt, _ = walk_sample_uniform_ref(nbr[safe], d, ut[:, 2])
+        else:
+            fr = frac[safe] if frac is not None else None
+            nxt, _ = walk_sample_ref(prob[safe], alias[safe], bias[safe],
+                                     nbr[safe], d, ut[:, 0], ut[:, 1],
+                                     ut[:, 2], ut[:, 3], ut[:, 4],
+                                     frac=fr, base_log2=base_log2)
+        alive = alive & (d > 0)
+        if stop_prob > 0.0:
+            alive = alive & (ut[:, 5] >= jnp.float32(stop_prob))
+        emit = alive & (nxt >= 0)
+        remote = alive & (nxt <= -2)
+        out = jnp.where((t0 <= t) & emit, nxt, -1)
+        fv = jnp.where(remote, -nxt - 2, fv)
+        ft = jnp.where(remote, t + 1, ft)
+        new_alive = emit
+        activate = occupied & (t0 == t + 1) & (t + 1 < L)
+        cur2 = jnp.where(new_alive, nxt, cur)
+        cur2 = jnp.where(activate, starts, cur2)
+        return (cur2, new_alive | activate, fv, ft), out
+
+    init = (jnp.maximum(starts, 0), alive0,
+            jnp.full((B,), -1, jnp.int32), jnp.full((B,), -1, jnp.int32))
+    (_, _, fv, ft), cols = jax.lax.scan(
+        step, init, (jnp.arange(L, dtype=jnp.int32), u))
+    path = jnp.concatenate([jnp.full((B, 1), -1, jnp.int32),
+                            jnp.swapaxes(cols, 0, 1)], axis=1)
+    colL = jnp.arange(L + 1, dtype=jnp.int32)[None, :]
+    path = jnp.where((colL == t0[:, None]) & occupied[:, None],
+                     starts[:, None], path)
+    return path, jnp.stack([fv, ft], axis=-1)
 
 
 def attention_ref(q, k, v, *, causal=True, window=0, scale=None,

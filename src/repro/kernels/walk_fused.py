@@ -28,13 +28,24 @@ Structure per walker tile of Bt:
     alias one-hot, stage (ii) masked lane cumsum, including the fp
     decimal group and base > 2 digit-acceptance lanes — or the
     degree-based ``uniform_pick`` for the ``simple`` kind;
-  * uniforms come from the in-kernel TPU PRNG (``pltpu.prng_random_bits``
-    seeded per tile from a fed scalar — replayable: same seed, same
-    walk), or from a fed (L, B, 6) array where the TPU PRNG is
-    unavailable (interpret mode) or a test wants to pin exact streams;
+  * uniforms are counter-based (``uniforms_at``): step-t uniforms are a
+    pure hash of ``(seed, walker row, t)``, so a walker draws the same
+    stream wherever (and whenever) step t executes — the resume
+    contract of the super-step relay (DESIGN.md §10).  Feeding ``u``
+    (L, B, 6) overrides the hash when a test wants to pin an exact
+    stream;
   * the (Bt, L+1) path tile is written to HBM once, column by column.
 
-Uniform column layout (fed or generated, 6 lanes per walker per step):
+**Segment entry** (``segment=True``, DESIGN.md §10): each walker carries
+a start step ``t0`` — it idles until loop step ``t0``, writes its start
+vertex at path column ``t0`` (earlier columns stay -1 and are merged by
+the caller), and walks the remaining ``L - t0`` steps.  Adjacency rows
+may encode *remote* neighbors as ``-(global_id + 2)``: a walker that
+samples one exits with a ``(vertex, step)`` frontier record instead of
+dying, which is what the relay routes to the vertex's owner shard.
+Slots with ``starts < 0`` are free and emit all -1.
+
+Uniform column layout (hashed or fed, 6 lanes per walker per step):
 ``u0`` alias bucket, ``u1`` alias coin, ``u2`` member pick, ``u3``
 acceptance coin, ``u4`` ITS position, ``u5`` PPR stop coin.
 """
@@ -43,6 +54,8 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -50,24 +63,59 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.walk_sample import sample_rows, uniform_pick
 
-__all__ = ["walk_fused_pallas", "NUM_UNIFORMS"]
+__all__ = ["walk_fused_pallas", "uniforms_at", "NUM_UNIFORMS"]
 
 NUM_UNIFORMS = 6
 
+# murmur3 finalizer constants + distinct odd counter multipliers, as
+# wrapped int32 (XLA integer multiply wraps; shifts below are logical).
+_M1 = np.int32(np.uint32(0x85EBCA6B).astype(np.int32))
+_M2 = np.int32(np.uint32(0xC2B2AE35).astype(np.int32))
+_P_WID = np.int32(np.uint32(0x9E3779B1).astype(np.int32))
+_P_T = np.int32(np.uint32(0x7FEB352D).astype(np.int32))
+_P_COL = np.int32(np.uint32(0x846CA68B).astype(np.int32))
 
-def _uniforms_from_bits(bits):
-    """uint32 random bits -> float32 uniforms in [0, 1) (24-bit mantissa)."""
-    top24 = jax.lax.shift_right_logical(pltpu.bitcast(bits, jnp.uint32), 8)
+
+def _fmix32(x):
+    """murmur3 32-bit finalizer on int32 (logical shifts, wrapping mul)."""
+    x = x ^ jax.lax.shift_right_logical(x, 16)
+    x = x * _M1
+    x = x ^ jax.lax.shift_right_logical(x, 13)
+    x = x * _M2
+    x = x ^ jax.lax.shift_right_logical(x, 16)
+    return x
+
+
+def uniforms_at(seed, wid, t, ncols: int = NUM_UNIFORMS):
+    """Counter-based per-(walker, step) uniforms — the relay PRNG contract.
+
+    ``seed`` scalar int32; ``wid``/``t`` broadcastable int32 arrays whose
+    broadcast ends in a length-1 trailing axis.  Returns float32 uniforms
+    in [0, 1) of that broadcast shape with the trailing axis widened to
+    ``ncols``.  A pure function of ``(seed, wid, t, column)`` built from
+    chained murmur3 finalizers: the same walker id draws the same step-t
+    stream on every shard, round, backend, and loop position — which is
+    what makes a relay-resumed walk bit-identical to the single-shard
+    walk (DESIGN.md §10).  Plain int32 jnp ops, so the kernel body and
+    the jnp oracle share this code path exactly.
+    """
+    h = _fmix32(seed ^ (wid * _P_WID))
+    h = _fmix32(h ^ (t * _P_T))
+    out_shape = h.shape[:-1] + (ncols,)
+    col = jax.lax.broadcasted_iota(jnp.int32, out_shape, len(out_shape) - 1)
+    h = _fmix32(h ^ (col * _P_COL))
+    top24 = jax.lax.shift_right_logical(h, 8)
     return top24.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
 def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
-            block_b, num_verts, *refs):
+            segment, block_b, num_verts, *refs):
     Bt = block_b
     # --- unpack refs: inputs, outputs, scratch (order fixed by pallas_call)
     refs = list(refs)
     seed_ref = refs.pop(0)                     # (1,) SMEM
     starts_ref = refs.pop(0)                   # (Bt, 1) VMEM
+    t0_ref = refs.pop(0) if segment else None  # (Bt, 1) VMEM
     u_ref = refs.pop(0) if has_u else None     # (L, Bt, 6) VMEM
     if uniform:
         nbr_hbm, deg_hbm = refs.pop(0), refs.pop(0)
@@ -80,11 +128,15 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
             frac_hbm = refs.pop(0)
             tabs += (frac_hbm,)
     out_ref = refs.pop(0)                      # (Bt, L+1) VMEM
+    fr_ref = refs.pop(0) if segment else None  # (Bt, 2) VMEM
     bufs = tuple(refs.pop(0) for _ in tabs)    # (2, Bt, ·) VMEM each
     state_v, state_s, gsem, ssem = refs        # VMEM/SMEM (Bt,2), DMA sems
 
-    if not has_u:
-        pltpu.prng_seed(seed_ref[0] + pl.program_id(0))
+    # Walker identity for the counter-based PRNG: the global batch row.
+    # The relay keeps slot == walker id by construction, so this is the
+    # cross-shard-stable id the resume contract needs.
+    wid = (pl.program_id(0) * Bt
+           + jax.lax.broadcasted_iota(jnp.int32, (Bt, 1), 0))
 
     def row_copies(slot, b, v):
         """The DMA set staging vertex ``v``'s rows into buffer ``slot``."""
@@ -114,11 +166,22 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
         cp.start()
         cp.wait()
 
-    # --- prologue: col 0 = starts, everyone alive, stage step-0 rows
+    # --- prologue: start vertex at col t0 (col 0 when not a segment),
+    # everything else -1, stage the step-0 rows of the t0 == 0 walkers.
     starts = starts_ref[...]
-    out_ref[:, 0:1] = starts
-    state_v[:, 0:1] = starts
-    state_v[:, 1:2] = jnp.ones((Bt, 1), jnp.int32)
+    colL = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
+    if segment:
+        t0 = t0_ref[...]
+        occupied = (starts >= 0) & (t0 <= length)
+        out_ref[...] = jnp.where((colL == t0) & occupied, starts, -1)
+        fr_ref[...] = jnp.full((Bt, 2), -1, jnp.int32)
+        alive0 = occupied & (t0 == 0)
+    else:
+        t0 = jnp.zeros((Bt, 1), jnp.int32)
+        out_ref[...] = jnp.where(colL == 0, starts, -1)
+        alive0 = jnp.ones((Bt, 1), jnp.bool_)
+    state_v[:, 0:1] = jnp.maximum(starts, 0)
+    state_v[:, 1:2] = alive0.astype(jnp.int32)
     sync_state()
     gather(0, "start")
 
@@ -130,8 +193,7 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
         if has_u:
             u = u_ref[t]                                     # (Bt, 6)
         else:
-            u = _uniforms_from_bits(
-                pltpu.prng_random_bits((Bt, NUM_UNIFORMS)))
+            u = uniforms_at(seed_ref[0], wid, t)
         if uniform:
             nbr, deg = bufs[0][slot], bufs[1][slot]
             nxt, _slt, ok = uniform_pick(nbr, deg, u[:, 2:3])
@@ -146,24 +208,39 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
         alive = alive & (deg > 0)
         if stop_prob > 0.0:
             alive = alive & (u[:, 5:6] >= jnp.float32(stop_prob))
+        # nxt >= 0 matches the scan reference's nxt_alive; rows may also
+        # mark hops unusable on purpose: -1 truncates (walk_whole's
+        # shard-local view), and in segment mode -(g+2) encodes a REMOTE
+        # neighbor — the walker exits with a frontier record instead.
+        emit = alive & (nxt >= 0)
         # column t+1 of the path tile via a lane-mask select — a dynamic
         # lane-dim store is the one construct Mosaic may refuse; the
         # (Bt, L+1) read-modify-write is a single VPU pass over ~100 KB.
-        colL = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
-        out_ref[...] = jnp.where(colL == t + 1,
-                                 jnp.where(alive, nxt, -1), out_ref[...])
-        # nxt >= 0 matches the scan reference's nxt_alive: with a
-        # well-formed state it is implied by ok, but adjacency rows that
-        # mark hops -1 on purpose (walk_cell's shard-local view truncates
-        # out-of-shard neighbors that way) must also terminate here.
+        # Lanes only write columns inside their own [t0, L] window so a
+        # later-starting walker's prologue column survives.
+        wmask = (colL == t + 1) & (t0 <= t)
+        out_ref[...] = jnp.where(wmask, jnp.where(emit, nxt, -1),
+                                 out_ref[...])
+        if segment:
+            remote = alive & (nxt <= -2)
+            fr_ref[...] = jnp.where(
+                remote,
+                jnp.concatenate([-nxt - 2, jnp.full_like(nxt, t + 1)], -1),
+                fr_ref[...])
         new_alive = alive & ok & (nxt >= 0)
-        state_v[:, 0:1] = jnp.where(new_alive, nxt, cur)
+        cur2 = jnp.where(new_alive, nxt, cur)
+        if segment:
+            # wake the walkers whose segment window opens at step t+1
+            activate = (starts >= 0) & (t0 == t + 1) & (t + 1 < length)
+            cur2 = jnp.where(activate, starts, cur2)
+            new_alive = new_alive | activate
+        state_v[:, 0:1] = cur2
         state_v[:, 1:2] = new_alive.astype(jnp.int32)
 
         # kick off step t+1's gathers immediately — they overlap nothing
         # upstream (the next vertex is data-dependent) but everything
-        # downstream: the loop epilogue, next wait setup, and (PRNG mode)
-        # the next uniform draw all run under the in-flight DMAs.
+        # downstream: the loop epilogue, next wait setup, and (hash-PRNG
+        # mode) the next uniform draw all run under the in-flight DMAs.
         @pl.when(t + 1 < length)
         def _():
             sync_state()
@@ -176,26 +253,35 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
 @functools.partial(
     jax.jit,
     static_argnames=("length", "base_log2", "stop_prob", "uniform",
-                     "block_b", "interpret"))
+                     "segment", "block_b", "interpret"))
 def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
-                      u=None, *, length: int, base_log2: int = 1,
+                      u=None, t0=None, *, length: int, base_log2: int = 1,
                       stop_prob: float = 0.0, uniform: bool = False,
-                      block_b: int = 256, interpret: bool = False):
+                      segment: bool = False, block_b: int = 256,
+                      interpret: bool = False):
     """Whole-walk fused BINGO walk: one ``pallas_call`` for all L steps.
 
     ``prob``/``alias`` (V, Kin), ``bias``/``nbr`` (V, C) int32, ``deg``
     (V,) int32 and optionally ``frac`` (V, C) float32 are the *full*
     ``BingoState`` tables, kept HBM-resident; ``starts`` (B,) int32;
-    ``seed`` (1,) int32 feeds the per-tile in-kernel PRNG.  Passing
-    ``u`` (L, B, 6) float32 overrides the PRNG with fed uniforms
-    (required in interpret mode, where the TPU PRNG has no lowering;
-    also how tests pin exact streams against ``ref.walk_fused_ref``).
+    ``seed`` (1,) int32 keys the counter-based per-(walker, step) PRNG
+    (``uniforms_at`` — same seed, same walk, on any shard).  Passing
+    ``u`` (L, B, 6) float32 overrides the hash with fed uniforms (how
+    tests pin exact streams against ``ref.walk_fused_ref``).
     ``uniform=True`` runs the degree-based unbiased pick (the ``simple``
     kind) and ignores prob/alias/bias/frac entirely.
 
-    Returns the (B, length+1) int32 path; column 0 is ``starts``,
-    terminated walkers pad with -1 (same contract as
-    ``core/walks.py:random_walk``).
+    ``segment=True`` is the resumable entry (DESIGN.md §10): ``t0``
+    (B,) int32 gives each walker's start step, ``starts < 0`` marks free
+    slots, adjacency values ``<= -2`` are remote neighbors encoded as
+    ``-(global_id + 2)``, and the return becomes ``(path, frontier)``
+    with ``frontier`` (B, 2) int32 ``[vertex, step]`` exit records
+    (-1 where the walker finished locally).
+
+    Returns the (B, length+1) int32 path; column ``t0`` (0 for whole
+    walks) is the start vertex, columns outside a walker's segment
+    window and terminated walkers pad with -1 (the
+    ``core/walks.py:random_walk`` contract).
     """
     if u is not None and u.shape[-1] < NUM_UNIFORMS:
         # Strict: the stop coin lives in column 5, and JAX's clamped
@@ -209,12 +295,17 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     has_u = u is not None
     block_b = min(block_b, B)
     grid = (pl.cdiv(B, block_b),)
+    if segment and t0 is None:
+        t0 = jnp.zeros((B,), jnp.int32)
 
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),              # seed
         pl.BlockSpec((block_b, 1), lambda i: (i, 0)),       # starts
     ]
     args = [seed, starts[:, None]]
+    if segment:
+        in_specs.append(pl.BlockSpec((block_b, 1), lambda i: (i, 0)))
+        args.append(t0[:, None])
     if has_u:
         in_specs.append(
             pl.BlockSpec((length, block_b, NUM_UNIFORMS),
@@ -240,6 +331,12 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     in_specs += [any_spec] * len(tab_args)
     args += tab_args
 
+    out_specs = [pl.BlockSpec((block_b, length + 1), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, length + 1), jnp.int32)]
+    if segment:
+        out_specs.append(pl.BlockSpec((block_b, 2), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, 2), jnp.int32))
+
     scratch = [pltpu.VMEM(s, d) for s, d in zip(buf_shapes, buf_dtypes)]
     scratch += [
         pltpu.VMEM((block_b, 2), jnp.int32),        # state_v: cur | alive
@@ -248,14 +345,14 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
         pltpu.SemaphoreType.DMA(()),                # state mirror copy
     ]
     kern = functools.partial(_kernel, length, base_log2, float(stop_prob),
-                             uniform, has_frac, has_u, block_b, V)
-    path = pl.pallas_call(
+                             uniform, has_frac, has_u, segment, block_b, V)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_b, length + 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, length + 1), jnp.int32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
     )(*args)
-    return path
+    return (out[0], out[1]) if segment else out[0]

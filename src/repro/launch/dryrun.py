@@ -128,6 +128,7 @@ def main():
                 if args.arch_filter in a]
         todo.append(("bingo-walk", "walk_step"))
         todo.append(("bingo-walk", "walk_whole"))
+        todo.append(("bingo-walk", "walk_relay"))
         todo.append(("bingo-walk", "update_walk"))
     else:
         todo = [(args.arch, args.shape)]

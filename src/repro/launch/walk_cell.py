@@ -15,6 +15,13 @@ Shapes: ``walk_step``  — one synchronous step of all walkers (sample +
         ``backend.sample_walk`` — one persistent megakernel launch on
         TPU — with no per-step exchange (the asynchronous-engine mode:
         walks stay shard-local, paths are gathered once at the end);
+        ``walk_relay`` — the exact sharded whole walk (DESIGN.md §10):
+        bulk-synchronous super-steps of the *resumable* megakernel —
+        each round every shard walks its residents as one segment,
+        walkers whose hop leaves the shard ride a (vertex, step, slot)
+        all_to_all mailbox to their new owner and resume there, and the
+        stitched paths are bit-identical to the single-shard walk (the
+        fix for walk_whole's boundary truncation);
         ``update_step`` — one batched graph update (100K updates) through
         ``backend.apply_updates`` (DESIGN.md §9);
         ``update_walk`` — the streaming-serving round (DESIGN.md §9):
@@ -116,7 +123,9 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
                 state, bcfg, jnp.clip(local, 0, shard_size - 1), key)
             alive = (walkers >= 0) & (nxt >= 0)
             nxt = jnp.where(alive, nxt, -1)
-            return exchange_walkers(nxt, shard_size, num_shards, axis=dp)
+            arrived, _leftover, _overflow = exchange_walkers(
+                nxt, shard_size, num_shards, axis=dp)
+            return arrived
 
         from jax.experimental.shard_map import shard_map
         walk_step = shard_map(
@@ -159,10 +168,10 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
         # the shard first rewrites its nbr table into shard-local rows,
         # truncating out-of-shard neighbors to -1: a walker whose next
         # hop leaves the shard terminates there (the asynchronous-engine
-        # trade — no exchange traffic, shard-local sub-walks; a real
-        # deployment would enqueue the walker for its new owner and
-        # resume it next round).  Paths are emitted in one
-        # (W/shards, L+1) write.
+        # trade — no exchange traffic, shard-local sub-walks; the
+        # walk_relay shape below re-enqueues walkers with their new
+        # owner instead and is exact, DESIGN.md §10).  Paths are emitted
+        # in one (W/shards, L+1) write.
         def walk_whole_local(state, walkers, seed):
             sidx = jax.lax.axis_index(dp[0])
             for a in dp[1:]:
@@ -197,6 +206,39 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
                           NamedSharding(mesh, P(dp)),
                           NamedSharding(mesh, P())),
             out_shardings=NamedSharding(mesh, P(dp)),
+            donate_argnums=(),
+            meta={"tokens": W * L, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    if shape_name == "walk_relay":
+        from repro.core.walks import WalkParams
+        from repro.distributed.relay import make_relay
+        W = wcfg.walkers
+        L = wcfg.walk_length
+        engine = get_backend(bcfg.backend)
+        wparams = WalkParams(kind="deepwalk", length=L)
+
+        # The super-step relay (DESIGN.md §10): per round, every shard
+        # runs ONE resumable megakernel segment over its residents,
+        # exiting walkers ride one (vertex, step, slot) all_to_all
+        # mailbox to their next owner, arrivals resume at their recorded
+        # step, and mailbox overflow is re-enqueued — looping until no
+        # walker is live anywhere.  Unlike walk_whole nothing truncates:
+        # the stitched (W, L+1) paths are bit-identical to the
+        # single-shard walk at any shard count.
+        walk_relay = make_relay(engine, bcfg, wparams, mesh)
+
+        rep = NamedSharding(mesh, P())
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=walk_relay,
+            args_sds=(state_sds, jax.ShapeDtypeStruct((W,), jnp.int32),
+                      jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       sspecs,
+                                       is_leaf=lambda s: isinstance(s, P)),
+                          rep, rep),
+            out_shardings=(NamedSharding(mesh, P(dp)), None, None),
             donate_argnums=(),
             meta={"tokens": W * L, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
         )

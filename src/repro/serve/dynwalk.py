@@ -25,10 +25,22 @@ dispatched through the configured ``EngineBackend`` (DESIGN.md §9):
 This replaces the per-callsite ``jax.jit(batched_update)`` wrappers the
 launch/ layer used to carry: "mutate graph, then walk" is one engine
 object, and the state buffers are aliased across the whole session.
+
+**Sharded mode** (DESIGN.md §10): pass ``mesh=`` and the engine serves
+the same surface off a vertex-partitioned state (§9.1).  Updates are
+routed to owner shards by an ownership mask and applied shard-locally
+(one update-megakernel launch per shard); walks run the bulk-
+synchronous ``walk_relay`` super-steps — resumable megakernel segments
+plus ``(vertex, step, slot)`` all_to_all mailboxes — so served paths
+are *bit-identical* to the single-device engine for the same key, at
+any shard count.  The donated-state discipline is unchanged: one
+sharded ``BingoState`` threads through every ingest and walk.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Iterable, Optional
 
 import jax
@@ -49,23 +61,83 @@ class DynamicWalkEngine:
     so after construction the caller must not hold (or re-use) the
     original buffers — read ``engine.state`` instead.  ``ingest`` and
     ``walk`` may be interleaved freely; each is one jitted call (one
-    megakernel launch each on the pallas backend).
+    megakernel launch each on the pallas backend — per shard, in
+    ``mesh=`` mode, where walks run the exact cross-shard relay).
     """
 
     def __init__(self, state: BingoState, cfg: BingoConfig,
                  params: WalkParams = WalkParams(), *,
                  backend: Optional[str] = None,
-                 whole_walk: Optional[bool] = None, seed: int = 0):
+                 whole_walk: Optional[bool] = None, seed: int = 0,
+                 mesh=None, mailbox_cap: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self._state = state
-        self._update = make_updater(cfg, backend=backend)
-        self._walk = make_walker(state, cfg, params, backend=backend,
-                                 whole_walk=whole_walk)
+        if mesh is None:
+            self._update = make_updater(cfg, backend=backend)
+            self._walk = make_walker(state, cfg, params, backend=backend,
+                                     whole_walk=whole_walk)
+        else:
+            self._state, self._update, self._walk = self._build_sharded(
+                state, cfg, params, backend, mesh, mailbox_cap)
         self._key = jax.random.key(seed)
         self.rounds_ingested = 0
         self.updates_applied = 0
         self.walks_served = 0
+
+    @staticmethod
+    def _build_sharded(state, cfg, params, backend, mesh, mailbox_cap):
+        """Vertex-partitioned serving closures (DESIGN.md §10).
+
+        The state's vertex dim shards over the full mesh; update batches
+        and walk starts stay replicated (global ids).  Ingest = owner-
+        masked ``apply_updates`` per shard (psum'd stats); walk = the
+        super-step relay, whose stitched (W, L+1) paths are bit-equal to
+        the single-device whole walk for the same key.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.backend import get_backend
+        from repro.distributed.relay import make_relay, shard_index
+        from repro.kernels.ops import seed_from_key
+
+        axes = tuple(mesh.axis_names)
+        num_shards = 1
+        for a in axes:
+            num_shards *= mesh.shape[a]
+        bk = get_backend(cfg.backend if backend is None else backend)
+        relay = make_relay(bk, cfg, params, mesh,
+                           mailbox_cap=mailbox_cap)   # validates V % S
+        shard_size = cfg.num_vertices // num_shards
+        lcfg = dataclasses.replace(cfg, num_vertices=shard_size)
+
+        sspec = jax.tree.map(
+            lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), state)
+
+        def update_local(st, is_insert, uu, vv, ww):
+            lo = shard_index(mesh) * shard_size
+            owned = (uu >= lo) & (uu < lo + shard_size)
+            lu = jnp.where(owned, uu - lo, 0)
+            st, stats = bk.apply_updates(st, lcfg, is_insert, lu, vv, ww,
+                                         active=owned)
+            return st, jax.tree.map(
+                lambda t: jax.lax.psum(t, axis_name=axes), stats)
+
+        smap_upd = shard_map(update_local, mesh=mesh,
+                             in_specs=(sspec, P(), P(), P(), P()),
+                             out_specs=(sspec, P()), check_rep=False)
+
+        update = jax.jit(smap_upd, donate_argnums=0)
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def walk(st, starts, key):
+            paths, _rounds, _ovf = relay(st, starts, seed_from_key(key))
+            return st, paths
+
+        sharded = jax.device_put(
+            state, jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                                is_leaf=lambda s: isinstance(s, P)))
+        return sharded, update, walk
 
     # -- state ownership -----------------------------------------------------
     @property

@@ -134,7 +134,11 @@ def test_walk_first_hop_matches_across_backends():
         p = np.asarray(walks.deepwalk(st, cfg, starts, jax.random.key(9),
                                       length=2, backend=backend))
         got = empirical_dist(p[:, 1], V)
-        assert tv_distance(got, want) < 0.03, backend
+        # E[TV] ≈ 0.027 for this 24-cell multinomial at B=4000 (both the
+        # counter-hash and jax.random streams measure ~0.0265 mean over
+        # many keys); 0.04 is ≈ mean + 2.5σ — a correct sampler clears
+        # it for any key, a biased one is an order of magnitude off.
+        assert tv_distance(got, want) < 0.04, backend
         for row in p:
             for a, b in zip(row[:-1], row[1:]):
                 if b == -1:

@@ -108,9 +108,91 @@ def test_exchange_walkers_single_shard_semantics():
     f = shard_map(
         lambda w: exchange_walkers(w, shard_size=100, num_shards=1,
                                    axis="data"),
-        mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+        mesh=mesh, in_specs=(P("data"),), out_specs=(P("data"),) * 2 + (P(),),
         check_rep=False)
-    out = np.asarray(f(walkers))
+    out, leftover, overflow = f(walkers)
+    out = np.asarray(out)
     live = sorted(x for x in out.tolist() if x >= 0)
     assert live == [2, 3, 5, 7, 9]
     assert len(out) == W
+    assert int(overflow) == 0
+    assert (np.asarray(leftover) == -1).all()
+
+
+def test_exchange_multifield_overflow_conservation():
+    """Mailbox overflow is returned to the sender, never dropped: for any
+    cap, sent multiset == arrived ∪ leftover (satellite: conservation),
+    and traffic <= cap loses nothing."""
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.experimental.shard_map import shard_map
+
+    rng = np.random.default_rng(0)
+    W = 16
+    rows = np.stack([rng.integers(0, 100, W),           # dest vertex
+                     rng.integers(0, 8, W),             # step
+                     np.arange(W)], -1).astype(np.int32)
+    rows[rng.random(W) < 0.25] = -1                     # empty rows
+    rows[0, 0] = 250        # unowned vertex (>= S * shard_size): no
+    rows[0, 1:] = (7, 0)    # owner exists — must surface as leftover,
+    payload = jnp.asarray(rows)                  # never silently drop
+    sent = {tuple(r) for r in rows.tolist() if r[0] >= 0}
+
+    for cap in (None, 2, 1):
+        f = shard_map(
+            lambda p: exchange_walkers(p, shard_size=100, num_shards=1,
+                                       axis="data", cap=cap),
+            mesh=mesh, in_specs=(P("data"),),
+            out_specs=(P("data"),) * 2 + (P(),), check_rep=False)
+        arrived, leftover, overflow = f(payload)
+        got = {tuple(r) for r in np.asarray(arrived).tolist() if r[0] >= 0}
+        kept = {tuple(r) for r in np.asarray(leftover).tolist() if r[0] >= 0}
+        assert got | kept == sent, cap
+        assert not (got & kept), cap
+        assert int(overflow) == len(kept), cap
+        assert (250, 7, 0) in kept          # unowned dest is NOT dropped
+        if cap is None or cap >= len(sent):
+            assert kept == {(250, 7, 0)}   # traffic <= cap: nothing else
+
+    with pytest.raises(ValueError, match="cap"):
+        exchange_walkers(payload, shard_size=100, num_shards=1, cap=0)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+def test_exchange_multishard_routing_and_conservation():
+    """4 shards: every routed record lands on its destination vertex's
+    owner, and arrived ∪ leftover over ALL shards is the sent multiset."""
+    from jax.experimental.shard_map import shard_map
+
+    S, shard_size, Wl = 4, 8, 12
+    mesh = jax.make_mesh((S,), ("data",))
+    rng = np.random.default_rng(1)
+    rows = np.stack([rng.integers(0, S * shard_size, S * Wl),
+                     rng.integers(0, 9, S * Wl),
+                     np.arange(S * Wl)], -1).astype(np.int32)
+    rows[rng.random(S * Wl) < 0.2] = -1
+    payload = jnp.asarray(rows)
+    sent = {tuple(r) for r in rows.tolist() if r[0] >= 0}
+
+    for cap in (Wl, None, 1):       # per-pair traffic <= Wl always
+        def route(p):
+            arrived, leftover, overflow = exchange_walkers(
+                p, shard_size=shard_size, num_shards=S, axis="data",
+                cap=cap)
+            return arrived, leftover, overflow[None]   # (1,) per shard
+        f = shard_map(
+            route, mesh=mesh, in_specs=(P("data"),),
+            out_specs=(P("data"), P("data"), P("data")), check_rep=False)
+        arrived, leftover, overflow = f(payload)
+        arrived = np.asarray(arrived).reshape(S, -1, 3)
+        for s in range(S):
+            for v, _t, _w in arrived[s]:
+                if v >= 0:
+                    assert v // shard_size == s      # owner placement
+        got = {tuple(r) for r in arrived.reshape(-1, 3).tolist() if r[0] >= 0}
+        kept = {tuple(r) for r in np.asarray(leftover).tolist() if r[0] >= 0}
+        assert got | kept == sent and not (got & kept)
+        assert int(np.asarray(overflow).sum()) == len(kept)
+        if cap == Wl:
+            assert len(kept) == 0    # traffic <= cap: no walker lost

@@ -235,6 +235,125 @@ def test_walk_fused_ragged_batch_and_dead_ends():
     assert (path[:, 3:] == -1).all()
 
 
+@pytest.mark.parametrize("base_log2,fp,stop", [
+    (1, False, 0.0),
+    (2, True, 0.15),
+])
+def test_walk_fused_hash_prng_matches_ref(base_log2, fp, stop):
+    """Counter-based PRNG mode (u=None): the megakernel's in-loop
+    (seed, walker, t) hash draw must be bit-identical to the oracle's
+    materialized ``hash_uniforms_ref`` stream — the replay/resume
+    contract of DESIGN.md §10."""
+    st, cfg = _fused_case(base_log2=base_log2, fp=fp)
+    B, L = 37, 9
+    starts = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    seed = jnp.array([1234], jnp.int32)
+    frac = st.frac if fp else None
+    path_k = walk_fused_pallas(st.itable.prob, st.itable.alias, st.bias,
+                               st.nbr, st.deg, frac, starts, seed, None,
+                               length=L, base_log2=base_log2,
+                               stop_prob=stop, block_b=16, interpret=True)
+    path_r = ref.walk_fused_ref(st.itable.prob, st.itable.alias, st.bias,
+                                st.nbr, st.deg, frac, starts, None,
+                                base_log2=base_log2, stop_prob=stop,
+                                seed=seed, length=L)
+    np.testing.assert_array_equal(np.asarray(path_k), np.asarray(path_r))
+
+
+def _remoteify(nbr, frac_remote=0.3, seed=0):
+    """Encode a random subset of real adjacency entries as remote
+    neighbors ``-(g + 2)`` — the relay_view contract."""
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(nbr.shape) < frac_remote) & (nbr >= 0)
+    return jnp.where(mask, -(nbr + 2), nbr)
+
+
+@pytest.mark.parametrize("base_log2,fp,stop,uniform,fed", [
+    (1, False, 0.0, False, True),    # base-2 integer, fed uniforms
+    (2, True, 0.15, False, True),    # base-4 + fp + PPR stop
+    (1, False, 0.0, True, True),     # simple-kind degree pick
+    (1, False, 0.0, False, False),   # hash-PRNG mode
+])
+def test_walk_segment_matches_ref(base_log2, fp, stop, uniform, fed):
+    """Resumable segment entry vs the windowed scan oracle: random
+    per-walker start steps t0 (incl. t0 == L final-hop-only and free
+    starts < 0 slots), remote-encoded adjacency entries -> (vertex,
+    step) frontier records, bit-exact path AND frontier in both the
+    fed-uniform and counter-hash PRNG modes (DESIGN.md §10)."""
+    st, cfg = _fused_case(base_log2=base_log2, fp=fp)
+    B, L = 29, 8
+    rng = np.random.default_rng(3)
+    starts = jnp.asarray(rng.integers(0, cfg.num_vertices, B), jnp.int32)
+    starts = jnp.where(jnp.asarray(rng.random(B) < 0.2), -1, starts)
+    t0 = jnp.asarray(rng.integers(0, L + 1, B), jnp.int32)
+    nbr = _remoteify(st.nbr)
+    u = jax.random.uniform(jax.random.key(4), (L, B, 6)) if fed else None
+    seed = jnp.array([99], jnp.int32)
+    frac = st.frac if fp else None
+    args = ((None, None, None, nbr, st.deg, None) if uniform else
+            (st.itable.prob, st.itable.alias, st.bias, nbr, st.deg, frac))
+    path_k, fr_k = walk_fused_pallas(
+        *args, starts, seed, u, t0, length=L, base_log2=base_log2,
+        stop_prob=stop, uniform=uniform, segment=True, block_b=16,
+        interpret=True)
+    path_r, fr_r = ref.walk_segment_ref(
+        *args, starts, t0, u, length=L, base_log2=base_log2,
+        stop_prob=stop, uniform=uniform, seed=seed)
+    np.testing.assert_array_equal(np.asarray(path_k), np.asarray(path_r))
+    np.testing.assert_array_equal(np.asarray(fr_k), np.asarray(fr_r))
+    # structural checks: free slots emit nothing; a frontier record's
+    # step column is inside (0, L]; columns before t0 stay -1
+    pk, fk = np.asarray(path_k), np.asarray(fr_k)
+    free = np.asarray(starts) < 0
+    assert (pk[free] == -1).all() and (fk[free] == -1).all()
+    has_fr = fk[:, 0] >= 0
+    assert ((fk[has_fr, 1] > 0) & (fk[has_fr, 1] <= L)).all()
+    cols = np.arange(L + 1)[None, :]
+    assert (pk[cols < np.asarray(t0)[:, None]] == -1).all()
+
+
+def test_walk_segments_stitch_to_whole_walk():
+    """Segment composability — the relay's core algebra: splitting a walk
+    at its frontier exits and resuming each walker (same wid/slot, same
+    seed) on the 'other side' reproduces the unsplit walk bit-for-bit."""
+    st, cfg = _fused_case(seed=9)
+    B, L = 16, 10
+    starts = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    seed = jnp.array([5], jnp.int32)
+    whole = walk_fused_pallas(st.itable.prob, st.itable.alias, st.bias,
+                              st.nbr, st.deg, None, starts, seed, None,
+                              length=L, block_b=16, interpret=True)
+    # split the vertex set in two halves; each "shard" keeps its own
+    # half's neighbors and remote-encodes the other's as -(g + 2)
+    half = cfg.num_vertices // 2
+    enc = jnp.where(st.nbr < 0, st.nbr, -(st.nbr + 2))
+    nbr_lo = jnp.where((st.nbr >= 0) & (st.nbr < half), st.nbr, enc)
+    nbr_hi = jnp.where(st.nbr >= half, st.nbr, enc)
+
+    def seg(nbr, s, t):
+        return walk_fused_pallas(
+            st.itable.prob, st.itable.alias, st.bias, nbr, st.deg, None,
+            s, seed, None, t, length=L, segment=True, block_b=16,
+            interpret=True)
+
+    acc = jnp.full((B, L + 1), -1, jnp.int32)
+    s_lo = jnp.where(starts < half, starts, -1)
+    s_hi = jnp.where(starts >= half, starts, -1)
+    t_lo = t_hi = jnp.zeros((B,), jnp.int32)
+    for _ in range(L + 1):          # bounded hand-rolled relay, 2 "shards"
+        p, f = seg(nbr_lo, s_lo, t_lo)
+        q, g = seg(nbr_hi, s_hi, t_hi)
+        acc = jnp.maximum(acc, jnp.maximum(p, q))
+        # swap frontiers: lo exits resume in hi next round, and vice versa
+        s_hi = jnp.where(f[:, 0] >= 0, f[:, 0], -1)
+        t_hi = jnp.where(f[:, 0] >= 0, f[:, 1], 0)
+        s_lo = jnp.where(g[:, 0] >= 0, g[:, 0], -1)
+        t_lo = jnp.where(g[:, 0] >= 0, g[:, 1], 0)
+        if not bool(((s_lo >= 0) | (s_hi >= 0)).any()):
+            break
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(whole))
+
+
 def _subjaxprs(v):
     try:
         from jax.extend import core as jex_core
