@@ -15,7 +15,8 @@ no ``BingoState`` copies.  ``benchmarks/run.py`` persists the rows into
 
 from __future__ import annotations
 
-from benchmarks.common import build_state, dataset_stream, record, update_rate
+from benchmarks.common import (build_state, dataset_stream, record,
+                               record_sizing, update_rate)
 from repro.graph.streams import rounds_on_device
 
 SCALE = 10
@@ -25,6 +26,8 @@ BACKENDS = ("reference", "pallas")
 
 
 def main():
+    record_sizing("updates", num_vertices=1 << SCALE, update_batch=BATCH,
+                  rounds=ROUNDS, capacity=128)
     for mode in ("insertion", "deletion", "mixed"):
         V, stream = dataset_stream(SCALE, batch_size=BATCH, rounds=ROUNDS,
                                    mode=mode)

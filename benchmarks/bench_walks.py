@@ -24,7 +24,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import build_dataset, build_state, record, walk_rate
+from benchmarks.common import (build_dataset, build_state, record,
+                               record_sizing, walk_rate)
 from repro.core import walks
 
 SCALE = 9
@@ -49,10 +50,14 @@ PATHS = {
 
 
 def relay_rate(state, cfg, params, starts, *, seed: int = 0,
-               reps: int = 3) -> float:
+               reps: int = 3):
     """Steps/second of the sharded ``walk_relay`` path (DESIGN.md §10)
     over all local devices — bit-identical output to ``pallas-fused``,
-    measured with the same jitted-call protocol."""
+    measured with the same jitted-call protocol.  Also returns the
+    relay's ``rounds_to_completion`` and the peak per-shard slot
+    occupancy (the allocator-pressure diagnostics): a ping-pong graph
+    or a regressed free-list shows up here as a rounds/occupancy jump
+    long before it is visible in wall-clock."""
     from repro.core.backend import get_backend
     from repro.distributed.relay import make_relay
     from repro.kernels.ops import seed_from_key
@@ -61,30 +66,37 @@ def relay_rate(state, cfg, params, starts, *, seed: int = 0,
     if cfg.num_vertices % S or starts.shape[0] % S:
         S = 1
     mesh = jax.make_mesh((S,), ("data",))
-    relay = make_relay(get_backend("pallas"), cfg, params, mesh)
-    f = jax.jit(lambda st, wk, sd: relay(st, wk, sd)[0])
+    relay = make_relay(get_backend("pallas"), cfg, params, mesh,
+                       diagnostics=True)
+    f = jax.jit(lambda st, wk, sd: relay(st, wk, sd))
     sd = seed_from_key(jax.random.key(seed))
-    jax.block_until_ready(f(state, starts, sd))     # warmup/compile
+    out = jax.block_until_ready(f(state, starts, sd))   # warmup/compile
+    _, rounds, _, peak = out
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(f(state, starts, sd))
         ts.append(time.perf_counter() - t0)
     secs = float(np.median(ts))
-    return starts.shape[0] * params.length / max(secs, 1e-9)
+    rate = starts.shape[0] * params.length / max(secs, 1e-9)
+    return rate, int(rounds), int(peak)
 
 
 def main():
     V, src, dst, w = build_dataset(SCALE)
     st, cfg = build_state(V, src, dst, w, capacity=CAPACITY)
     starts = jnp.arange(WALKERS, dtype=jnp.int32) % V
+    record_sizing("walks", walkers=WALKERS, num_vertices=V,
+                  walk_length=LENGTH, capacity=CAPACITY)
     for kind, params in KINDS.items():
         for path, (backend, whole) in PATHS.items():
             rate = walk_rate(st, cfg, params, starts, backend=backend,
                              whole_walk=whole)
             record("walks", f"{kind}-{path}", "steps_per_sec", rate)
-        record("walks", f"{kind}-relay", "steps_per_sec",
-               relay_rate(st, cfg, params, starts))
+        rate, rounds, peak = relay_rate(st, cfg, params, starts)
+        record("walks", f"{kind}-relay", "steps_per_sec", rate)
+        record("walks", f"{kind}-relay", "rounds_to_completion", rounds)
+        record("walks", f"{kind}-relay", "peak_slot_occupancy", peak)
 
 
 if __name__ == "__main__":

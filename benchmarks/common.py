@@ -21,12 +21,22 @@ from repro.graph.rmat import degree_bias, rmat_edges
 from repro.graph.streams import make_update_stream
 
 ROWS: list[dict] = []
+SIZING: dict[str, dict] = {}
 
 
 def record(bench: str, case: str, metric: str, value: float):
     ROWS.append({"bench": bench, "case": case, "metric": metric,
                  "value": value})
     print(f"{bench},{case},{metric},{value:.6g}", flush=True)
+
+
+def record_sizing(bench: str, **dims) -> None:
+    """Stamp a bench's problem sizing (W, V, L, …) for its JSON snapshot
+    — numbers from different machines/sizings are not comparable, so
+    ``run.py`` persists these alongside the platform/device/interpret
+    environment (the reason a CPU-interpret snapshot must never be read
+    as a TPU perf claim)."""
+    SIZING.setdefault(bench, {}).update(dims)
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, reps: int = 3) -> float:

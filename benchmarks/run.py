@@ -39,15 +39,41 @@ MODULES = {
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def _bench_env() -> dict:
+    """The stamp that makes snapshots comparable: numbers taken on a
+    different platform/device count — or in interpret mode, where the
+    pallas paths emulate the kernel program instruction by instruction
+    and predictably lose to plain XLA — must never be diffed as a perf
+    trajectory.  (The CPU-CI snapshots showing pallas-fused behind
+    reference are exactly that artifact.)"""
+    import jax
+    from repro.kernels.ops import on_tpu
+    return {
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "interpret": not on_tpu(),
+        "jax": jax.__version__,
+    }
+
+
 def _write_bench_json(path: str, bench: str, metric: str) -> None:
-    """Persist one bench's rows as a {case: value} JSON snapshot."""
+    """Persist one bench's rows as a {case: value} JSON snapshot, plus
+    the environment/sizing stamp and any secondary metrics (e.g. the
+    relay's rounds_to_completion / peak_slot_occupancy) under
+    ``extras``."""
+    from benchmarks.common import SIZING
     rows = {r["case"]: r["value"] for r in ROWS
             if r["bench"] == bench and r["metric"] == metric}
     if not rows:
         return
+    extras = {f"{r['case']}.{r['metric']}": r["value"] for r in ROWS
+              if r["bench"] == bench and r["metric"] != metric}
+    doc = {"bench": bench, "metric": metric, "env": _bench_env(),
+           "sizing": SIZING.get(bench, {}), "cases": rows}
+    if extras:
+        doc["extras"] = extras
     with open(path, "w") as f:
-        json.dump({"bench": bench, "metric": metric, "cases": rows},
-                  f, indent=1, sort_keys=True)
+        json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}", flush=True)
 

@@ -69,7 +69,7 @@ Registering a new backend:
         def sample_walk(self, state, cfg, starts, key, params,
                         u=None): ...
         def sample_walk_segment(self, state, cfg, starts, t0, seed,
-                                params, u=None): ...
+                                params, u=None, wid=None): ...
 """
 
 from __future__ import annotations
@@ -112,9 +112,11 @@ class EngineBackend(Protocol):
     starts, terminated walkers pad -1 — the ``random_walk`` contract;
     ``u`` (L, B, 6) optionally pins the exact uniform stream), and the
     resumable-segment capability ``sample_walk_segment(state, cfg,
-    starts, t0, seed (1,) int32, params, u=None) -> (path (B, L+1),
-    frontier (B, 2))`` — one relay round over per-walker windows
-    [t0, exit) with the counter-based PRNG contract (DESIGN.md §10).
+    starts, t0, seed (1,) int32, params, u=None, wid=None) ->
+    (path (B, L+1), frontier (B, 2))`` — one relay round over
+    per-walker windows [t0, exit) with the counter-based PRNG contract,
+    keyed by the slot→wid map ``wid`` so compacted slot layouts draw
+    the walker's own stream (DESIGN.md §10).
     ``random_walk`` prefers ``sample_walk`` over the per-step scan for
     deepwalk/ppr/simple when present; the distributed relay requires
     ``sample_walk_segment``.
@@ -234,10 +236,12 @@ class PallasBackend:
             uniform=params.kind == "simple")
 
     def sample_walk_segment(self, state, cfg, starts, t0, seed, params,
-                            u=None):
+                            u=None, wid=None):
         """One relay round through the megakernel's resumable entry
         (DESIGN.md §10).  ``seed`` is the raw (1,) int32 PRNG seed
-        (``ops.seed_from_key``) shared across shards and rounds."""
+        (``ops.seed_from_key``) shared across shards and rounds; ``wid``
+        is the compacted relay's slot→wid map (PRNG keys by global
+        walker id, not by lane)."""
         if params.kind == "node2vec":
             raise ValueError(
                 "node2vec has no segment path (per-step only, DESIGN.md §8)")
@@ -246,7 +250,7 @@ class PallasBackend:
         return ops.walk_segment(
             state.itable.prob, state.itable.alias, state.bias, state.nbr,
             state.deg, state.frac if cfg.fp_bias else None, starts, t0,
-            seed, u, length=params.length, base_log2=cfg.base_log2,
+            seed, u, wid, length=params.length, base_log2=cfg.base_log2,
             stop_prob=stop, uniform=params.kind == "simple")
 
     def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):

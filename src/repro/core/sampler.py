@@ -188,10 +188,12 @@ class ReferenceBackend:
             uniform=params.kind == "simple")
 
     def sample_walk_segment(self, state, cfg, starts, t0, seed, params,
-                            u=None):
+                            u=None, wid=None):
         """One relay round as the windowed jnp scan — bit-exact against
         the pallas megakernel's ``segment=True`` entry in both the fed-
-        uniform and counter-based hash PRNG modes (DESIGN.md §10)."""
+        uniform and counter-based hash PRNG modes (DESIGN.md §10).
+        ``wid`` is the compacted relay's slot→wid map (hash PRNG keys
+        by global walker id, not by lane)."""
         if params.kind == "node2vec":
             raise ValueError(
                 "node2vec has no segment path (per-step only, DESIGN.md §8)")
@@ -200,8 +202,8 @@ class ReferenceBackend:
         return ref.walk_segment_ref(
             state.itable.prob, state.itable.alias, state.bias, state.nbr,
             state.deg, state.frac if cfg.fp_bias else None, starts, t0, u,
-            length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
-            uniform=params.kind == "simple", seed=seed)
+            wid, length=params.length, base_log2=cfg.base_log2,
+            stop_prob=stop, uniform=params.kind == "simple", seed=seed)
 
     def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
         """Batched §5.2 round via the whole-table jnp pipeline — the

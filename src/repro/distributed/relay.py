@@ -7,32 +7,52 @@ KnightKing/ThunderRW walker-centric discipline on the §9.1 vertex
 partition (DESIGN.md §10): walkers move between owners in bulk
 *super-steps* while the sampling structures never move.
 
+Resident state is **slot-compacted**: each shard keeps ``Wl = W/S +
+slack`` walker slots (not ``W``), sized to *active residents* rather
+than the global walker-id space — the Bingo space-consumption principle
+(paper §1, principle ii) applied to the distributed layer, and the same
+scaling observation behind Wharf's space-efficient walk storage and
+FlexiWalker's runtime-adaptive walkers.  A free-list allocator places
+walkers into open slots; every array a walker touches is keyed by the
+*global* walker id it carries, so placement order is irrelevant to the
+result.
+
 One round, per shard, inside ``shard_map``:
 
-  1. **segment** — run the resumable megakernel
-     (``EngineBackend.sample_walk_segment``) over the shard's resident
-     walkers: each enters at its own step ``t0`` and walks until it
-     finishes or samples a remote neighbor (encoded ``-(g + 2)`` by
-     ``relay_view``), exiting with a ``(vertex, step)`` frontier record;
-  2. **merge** — the segment's path columns are scattered into the
-     walker's *originating* row of a (W, L+1) accumulator (slot == wid
-     by construction, so the scatter is the identity placement; columns
-     outside the segment window are -1 and merge by ``maximum``);
-  3. **route** — frontier records (plus any mailbox leftovers from the
-     previous round) ride one ``exchange_walkers`` all_to_all as
-     ``(vertex, step, slot)`` payloads; overflow beyond a mailbox cap is
-     returned to the sender and re-enqueued next round — no walker is
-     ever dropped;
-  4. **place** — arrivals land in their wid-indexed slot with
-     ``t0 = step``, becoming next round's residents.
+  1. **place** — the free-list allocator moves queued walkers (initial
+     residents and later arrivals, held in a ``(W, 3)`` waiting queue
+     of ``(vertex, step, wid)`` records) into open slots;
+  2. **segment** — ONE resumable megakernel launch
+     (``EngineBackend.sample_walk_segment``) walks all occupied slots:
+     each walker enters at its recorded step ``t0``, draws its
+     ``(seed, wid, t)`` hash stream through the slot→wid map, and walks
+     until it finishes or samples a remote neighbor (encoded
+     ``-(g + 2)`` by ``relay_view``), exiting with a ``(vertex, step)``
+     frontier record;
+  3. **route walkers** — frontier records plus previous-round outbox
+     leftovers ride one ``exchange_walkers`` all_to_all as
+     ``(vertex, step, wid)`` payloads; arrivals join the receiver's
+     waiting queue; mailbox overflow is returned to the sender's outbox
+     and re-enqueued — no walker is ever dropped;
+  4. **route paths** — every slot that walked emits its freshly written
+     path columns as one ``(home-tag, wid, slot, path…)`` record routed
+     to the walker's *home* shard (``wid // (W/S)``), where it scatters
+     into the ``(W/S, L+1)`` home-block accumulator at row
+     ``wid % (W/S)`` (columns merge by ``maximum`` — segment windows
+     are disjoint).  Home-local records scatter directly; records that
+     overflow the path mailbox stay *pinned to their slot* (the slot is
+     not reallocated until its columns are delivered), so per-shard
+     path state is strictly ``O(Wl · L)``.
 
-The loop runs until no walker is resident, in flight, or left over
-anywhere (a psum'd count), bounded by ``max_rounds``.  Because the
-per-(walker, t) uniform stream is a pure hash of ``(seed, wid, t)``
-(``kernels/walk_fused.py:uniforms_at``) — or fed explicitly — a resumed
-walker draws exactly what it would have drawn locally, so the stitched
-(W, L+1) paths are *bit-identical* to the single-shard
-``random_walk`` at any shard count (``tests/test_walk_relay.py``).
+The loop runs until no walker is resident, queued, in an outbox, or
+pinned anywhere (a psum'd count), bounded by ``max_rounds``.  Because
+the per-(walker, t) uniform stream is a pure hash of ``(seed, wid, t)``
+(``kernels/walk_fused.py:uniforms_at``) — or fed explicitly and
+gathered per slot — a resumed walker draws exactly what it would have
+drawn locally, so the home blocks concatenate to a (W, L+1) array
+*bit-identical* to the single-shard ``random_walk`` at any shard count
+(``tests/test_walk_relay.py``), with per-shard resident state ~S×
+smaller than the wid-indexed layout it replaced (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -43,9 +63,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.walker_exchange import exchange_walkers
+from repro.distributed.walker_exchange import exchange_walkers, route_tag
 
-__all__ = ["relay_view", "relay_local", "make_relay", "shard_index"]
+__all__ = ["relay_view", "relay_local", "make_relay", "shard_index",
+           "slot_count"]
 
 
 def shard_index(mesh):
@@ -55,6 +76,23 @@ def shard_index(mesh):
     for a in axes[1:]:
         s = s * mesh.shape[a] + jax.lax.axis_index(a)
     return s
+
+
+def slot_count(W: int, num_shards: int, slack: int | None = None) -> int:
+    """Compacted slots per shard: ``Wl = min(W, W/S + slack)``.
+
+    The default slack — ``max(8, ceil(W/S / 2))``, i.e. half a home
+    block — absorbs arrival bursts of up to 1.5× a uniform resident
+    load without queueing; anything beyond waits in the ``(W, 3)``
+    queue (exact, just more rounds).  ``slack=0`` is legal and exact:
+    every shard then holds at most one home block of residents.
+    """
+    Wb = W // num_shards
+    if slack is None:
+        slack = max(8, -(-Wb // 2))
+    elif slack < 0:
+        raise ValueError(f"slot slack must be >= 0; got {slack}")
+    return min(W, Wb + slack)
 
 
 def relay_view(state, lo: int, shard_size: int):
@@ -70,10 +108,23 @@ def relay_view(state, lo: int, shard_size: int):
     return state._replace(nbr=jnp.where(owned, state.nbr - lo, enc))
 
 
+def _compact_rows(rows, limit: int):
+    """Valid rows (field 0 >= 0) first, truncated to ``limit`` rows.
+
+    Callers only pass row sets whose valid count is <= ``limit`` by
+    construction (each row is a distinct walker and there are at most W
+    walkers anywhere), so the truncation never drops a valid row."""
+    order = jnp.argsort(rows[:, 0] < 0)         # stable: valid first
+    return rows[order][:limit]
+
+
 def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
                 sidx, num_shards: int, shard_size: int, axis,
                 mailbox_cap: int | None = None,
-                max_rounds: int | None = None):
+                max_rounds: int | None = None,
+                slot_slack: int | None = None,
+                path_cap: int | None = None,
+                diagnostics: bool = False):
     """Per-shard body of the super-step relay (call inside shard_map).
 
     ``bk``/``lcfg``/``params`` — an ``EngineBackend`` with
@@ -84,96 +135,182 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     ``walkers`` (W,) int32 — global start vertices, replicated (each
     shard adopts its residents); ``seed`` (1,) int32 — the shared
     counter-PRNG seed (``ops.seed_from_key``); ``u`` — optional
-    (L, W, 6) fed uniforms, replicated.
+    (L, W, 6) fed uniforms, replicated (gathered per slot through the
+    slot→wid map each round).
+
+    ``slot_slack`` sizes the compacted slot arrays (``slot_count``);
+    ``mailbox_cap``/``path_cap`` bound the walker / path-record
+    mailboxes per (sender, destination) pair — overflow of either is
+    re-enqueued, never dropped.
 
     Returns ``(paths (W//num_shards, L+1) int32, rounds, overflow)`` —
-    this shard's block of the stitched global path array (vertex ids
-    global, the ``random_walk`` contract), the number of relay rounds
+    this shard's *home block* of the stitched global path array (vertex
+    ids global, the ``random_walk`` contract; walker ``wid``'s row
+    lives on shard ``wid // (W/S)``), the number of relay rounds
     executed, and the total mailbox-overflow re-enqueues observed
-    (both replicated scalars).
+    (both replicated scalars).  With ``diagnostics=True`` a fourth
+    replicated scalar is appended: the peak number of slots in use on
+    any shard in any round (resident walkers + pinned path rows) —
+    the allocator-pressure signal benchmarks record.
     """
     W = walkers.shape[0]
     L = params.length
     if W % num_shards:
         # The stitched output is reassembled from per-shard (W // S)
-        # blocks; a ragged W would silently drop the tail walkers.
+        # home blocks; a ragged W would silently drop the tail walkers.
         raise ValueError(
             f"walker count {W} must divide over {num_shards} shards "
             f"(pad starts with -1 free slots)")
     if max_rounds is None:
         # Safety bound only — the loop exits when nothing is pending.
-        # Every round with pending work delivers >= 1 mailbox record or
-        # advances >= 1 resident walker, and a walker consumes at most
-        # L crossings + L steps, so W * L * 2 rounds covers even a
-        # cap=1 mailbox funneling every record one at a time (the
-        # ping-pong worst case without overflow needs exactly L).
-        max_rounds = 2 * W * L + 4
+        # Every round with pending work delivers >= 1 mailbox record
+        # (walker or path), places >= 1 queued walker, or advances >= 1
+        # resident, and a walker consumes at most L crossings + L steps
+        # + L path deliveries, so this covers even a cap=1 mailbox
+        # funneling every record one at a time.
+        max_rounds = 2 * W * (L + 2) + 8
+    Wb = W // num_shards
+    Wl = slot_count(W, num_shards, slot_slack)
     lo = sidx * shard_size
     view = relay_view(state, lo, shard_size)
-    wid = jnp.arange(W, dtype=jnp.int32)
+    slot_ids = jnp.arange(Wl, dtype=jnp.int32)
 
+    # Initial residents queue at the shard owning their start vertex;
+    # the allocator drains the queue into slots from round 1 on (a
+    # start-vertex hot spot may exceed Wl — exactness does not care).
+    wid0 = jnp.arange(W, dtype=jnp.int32)
     resident0 = (walkers >= 0) & (walkers // shard_size == sidx)
-    cur0 = jnp.where(resident0, walkers - lo, -1)
-    t00 = jnp.zeros((W,), jnp.int32)
-    leftover0 = jnp.full((W, 3), -1, jnp.int32)
-    acc0 = jnp.full((W, L + 1), -1, jnp.int32)
+    waiting0 = jnp.stack(
+        [jnp.where(resident0, walkers, -1),
+         jnp.zeros((W,), jnp.int32),
+         jnp.where(resident0, wid0, -1)], axis=-1)
+    outbox0 = jnp.full((W, 3), -1, jnp.int32)
+    pend_path0 = jnp.full((Wl, L + 1), -1, jnp.int32)
+    pend_wid0 = jnp.full((Wl,), -1, jnp.int32)
+    acc0 = jnp.full((Wb, L + 1), -1, jnp.int32)
     pending0 = jax.lax.psum(resident0.sum(dtype=jnp.int32), axis_name=axis)
 
     def cond(c):
-        r, _cur, _t0, _left, _acc, _ovf, pending = c
+        r = c[0]
+        pending = c[-1]
         return (pending > 0) & (r < max_rounds)
 
     def body(c):
-        r, cur, t0, leftover, acc, ovf, _pending = c
+        r, pend_path, pend_wid, waiting, outbox, acc, ovf, peak, _p = c
+
+        # -- place: free-list allocator drains the waiting queue into
+        # open slots (a slot stays pinned while it holds an undelivered
+        # path row).  Placement order never affects the result: every
+        # per-walker quantity downstream is keyed by the wid the slot
+        # carries, not by the slot index.
+        free = pend_wid < 0
+        forder = jnp.argsort(~free)             # free slot indices first
+        nfree = free.sum(dtype=jnp.int32)
+        ws = _compact_rows(waiting, W)
+        k = jnp.arange(W, dtype=jnp.int32)
+        place = (k < nfree) & (ws[:, 0] >= 0)
+        tgt = jnp.where(place, forder[jnp.minimum(k, Wl - 1)], Wl)
+        slot_wid = jnp.full((Wl,), -1, jnp.int32).at[tgt].set(
+            ws[:, 2], mode="drop")
+        slot_cur = jnp.full((Wl,), -1, jnp.int32).at[tgt].set(
+            ws[:, 0] - lo, mode="drop")
+        slot_t0 = jnp.zeros((Wl,), jnp.int32).at[tgt].set(
+            ws[:, 1], mode="drop")
+        waiting = jnp.where(place[:, None], -1, ws)
+        occupied = slot_wid >= 0
+        # local max only — max over rounds and shards commute, so the
+        # cross-shard pmax happens ONCE after the loop (diagnostics
+        # path), not as a per-round collective in the hot loop.
+        peak = jnp.maximum(
+            peak,
+            occupied.sum(dtype=jnp.int32) + (~free).sum(dtype=jnp.int32))
+
+        # -- segment: one resumable megakernel launch over the compacted
+        # slots; the slot→wid map keys the hash PRNG (and gathers the
+        # fed stream) so each walker draws its own columns.
+        u_slots = None if u is None else jnp.take(
+            u, jnp.maximum(slot_wid, 0), axis=1)
+        starts = jnp.where(occupied, slot_cur, -1)
         paths, frontier = bk.sample_walk_segment(
-            view, lcfg, cur, t0, seed, params, u=u)
-        # merge into the originating rows (slot == wid): local ids back
-        # to global, -1 stays -1, and jnp.maximum stitches disjoint
-        # segment windows (vertex ids are >= 0 wherever written).
-        acc = jnp.maximum(acc, jnp.where(paths >= 0, paths + lo, -1))
-        # outgoing (vertex, step, slot) records; rows are disjoint from
-        # leftovers by construction (a leftover walker was not resident,
-        # so its frontier row is empty).
-        out_pay = jnp.stack(
-            [frontier[:, 0], frontier[:, 1], wid], axis=-1)
-        out_pay = jnp.where(frontier[:, 0:1] >= 0, out_pay, -1)
-        pend = jnp.where(leftover[:, 0:1] >= 0, leftover, out_pay)
-        arrived, spill, spilled = exchange_walkers(
-            pend, shard_size, num_shards, axis, cap=mailbox_cap)
-        # exchange returns spilled rows in sort order; re-key them by
-        # their slot field so next round's merge with fresh frontier
-        # records stays disjoint per walker.
-        s_ok = spill[:, 0] >= 0
-        leftover2 = jnp.full((W, 3), -1, jnp.int32).at[
-            jnp.where(s_ok, spill[:, 2], W)].set(spill, mode="drop")
-        # place arrivals: walker `slot` resumes at vertex - lo, step t.
-        a_ok = arrived[:, 0] >= 0
-        a_slot = jnp.where(a_ok, arrived[:, 2], W)
-        cur2 = jnp.full((W,), -1, jnp.int32).at[a_slot].set(
-            jnp.where(a_ok, arrived[:, 0] - lo, 0), mode="drop")
-        t02 = jnp.zeros((W,), jnp.int32).at[a_slot].set(
-            jnp.where(a_ok, arrived[:, 1], 0), mode="drop")
+            view, lcfg, starts, slot_t0, seed, params, u=u_slots,
+            wid=slot_wid)
+
+        # -- route walkers: fresh frontier exits + outbox leftovers ride
+        # one all_to_all as (vertex, step, wid) records; arrivals queue
+        # at the receiver (placement happens next round), spills return
+        # to the sender's outbox.
+        fr_ok = occupied & (frontier[:, 0] >= 0)
+        new_fr = jnp.where(
+            fr_ok[:, None],
+            jnp.stack([frontier[:, 0], frontier[:, 1], slot_wid], -1), -1)
+        pay_w = jnp.concatenate([outbox, new_fr], axis=0)
+        arrived, spill_w, n_spill_w = exchange_walkers(
+            pay_w, shard_size, num_shards, axis, cap=mailbox_cap)
+        outbox = _compact_rows(spill_w, W)
+        waiting = _compact_rows(
+            jnp.concatenate([waiting, arrived], axis=0), W)
+
+        # -- route paths: every slot that walked this round emits its
+        # path columns (translated to global ids) toward the walker's
+        # home shard; pinned rows from earlier rounds retry alongside.
+        row_path = jnp.where(occupied[:, None],
+                             jnp.where(paths >= 0, paths + lo, -1),
+                             pend_path)
+        row_wid = jnp.where(occupied, slot_wid, pend_wid)
+        has_row = row_wid >= 0
+        home = jnp.where(has_row, row_wid // Wb, -1)
+        local = has_row & (home == sidx)
+        lrow = jnp.where(local, row_wid - sidx * Wb, Wb)
+        acc = acc.at[lrow].max(
+            jnp.where(local[:, None], row_path, -1), mode="drop")
+        remote = has_row & (home != sidx)
+        pay_p = jnp.concatenate(
+            [jnp.where(remote, route_tag(home, shard_size), -1)[:, None],
+             jnp.where(remote, row_wid, -1)[:, None],
+             jnp.where(remote, slot_ids, -1)[:, None],
+             jnp.where(remote[:, None], row_path, -1)], axis=1)
+        got, spill_p, n_spill_p = exchange_walkers(
+            pay_p, shard_size, num_shards, axis, cap=path_cap)
+        g_ok = got[:, 0] >= 0
+        grow = jnp.where(g_ok, got[:, 1] - sidx * Wb, Wb)
+        acc = acc.at[grow].max(
+            jnp.where(g_ok[:, None], got[:, 3:], -1), mode="drop")
+        # spilled rows stay pinned to their slot (re-keyed by the slot
+        # field — exchange returns them in sort order); delivered and
+        # home-local rows free theirs.
+        s_ok = spill_p[:, 0] >= 0
+        s_slot = jnp.where(s_ok, spill_p[:, 2], Wl)
+        pend_path = jnp.full((Wl, L + 1), -1, jnp.int32).at[s_slot].set(
+            spill_p[:, 3:], mode="drop")
+        pend_wid = jnp.full((Wl,), -1, jnp.int32).at[s_slot].set(
+            spill_p[:, 1], mode="drop")
+
         pending = jax.lax.psum(
-            (cur2 >= 0).sum(dtype=jnp.int32)
-            + (leftover2[:, 0] >= 0).sum(dtype=jnp.int32), axis_name=axis)
-        ovf = ovf + jax.lax.psum(spilled, axis_name=axis)
-        return r + 1, cur2, t02, leftover2, acc, ovf, pending
+            (waiting[:, 0] >= 0).sum(dtype=jnp.int32)
+            + (outbox[:, 0] >= 0).sum(dtype=jnp.int32)
+            + (pend_wid >= 0).sum(dtype=jnp.int32), axis_name=axis)
+        ovf = ovf + jax.lax.psum(n_spill_w + n_spill_p, axis_name=axis)
+        return (r + 1, pend_path, pend_wid, waiting, outbox, acc, ovf,
+                peak, pending)
 
-    rounds, _, _, _, acc, ovf, _ = jax.lax.while_loop(
+    rounds, _, _, _, _, acc, ovf, peak, _ = jax.lax.while_loop(
         cond, body,
-        (jnp.int32(0), cur0, t00, leftover0, acc0, jnp.int32(0), pending0))
+        (jnp.int32(0), pend_path0, pend_wid0, waiting0, outbox0, acc0,
+         jnp.int32(0), jnp.int32(0), pending0))
 
-    # one coherent (W, L+1) array: every shard contributes the columns it
-    # walked; element-wise max over shards stitches them, and this shard
-    # returns its wid block (shard_map reassembles the P(axis) output).
-    acc = jax.lax.pmax(acc, axis_name=axis)
-    Wb = W // num_shards
-    block = jax.lax.dynamic_slice(acc, (sidx * Wb, 0), (Wb, L + 1))
-    return block, rounds, ovf
+    # acc IS this shard's home block: walker wid's row landed here iff
+    # wid // Wb == sidx, so the P(axis)-concatenated output is the
+    # coherent (W, L+1) array with no cross-shard stitch collective.
+    if diagnostics:
+        return acc, rounds, ovf, jax.lax.pmax(peak, axis_name=axis)
+    return acc, rounds, ovf
 
 
 def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
-               max_rounds: int | None = None):
+               max_rounds: int | None = None,
+               slot_slack: int | None = None,
+               path_cap: int | None = None,
+               diagnostics: bool = False):
     """Build the shard_mapped relay: the one wrapper every layer shares.
 
     Vertex-shards ``cfg.num_vertices`` over ALL of ``mesh``'s axes and
@@ -182,9 +319,12 @@ def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
     shardable) ``BingoState``, ``walkers`` (W,) int32 global start
     vertices replicated (-1 = free slot; W must divide over the shard
     count), ``seed`` (1,) int32 (``ops.seed_from_key``), ``u`` optional
-    (L, W, 6) fed uniforms.  Used by the ``walk_relay`` launch cell, the
-    sharded ``DynamicWalkEngine``, benchmarks and tests, so the
-    divisibility validation and spec plumbing live in exactly one place.
+    (L, W, 6) fed uniforms.  ``slot_slack`` sizes the compacted
+    per-shard slot arrays (``slot_count``); ``diagnostics=True``
+    appends the peak per-shard slot occupancy as a fourth output.  Used
+    by the ``walk_relay`` launch cell, the sharded
+    ``DynamicWalkEngine``, benchmarks and tests, so the divisibility
+    validation and spec plumbing live in exactly one place.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -204,13 +344,16 @@ def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
             bk, lcfg, params, state, walkers, seed,
             rest[0] if rest else None, sidx=shard_index(mesh),
             num_shards=num_shards, shard_size=shard_size, axis=axes,
-            mailbox_cap=mailbox_cap, max_rounds=max_rounds)
+            mailbox_cap=mailbox_cap, max_rounds=max_rounds,
+            slot_slack=slot_slack, path_cap=path_cap,
+            diagnostics=diagnostics)
 
     def run(state, walkers, seed, u=None):
         sspec = jax.tree.map(lambda _: P(axes), state)
         in_specs = (sspec, P(), P()) + (() if u is None else (P(),))
+        out_specs = (P(axes), P(), P()) + ((P(),) if diagnostics else ())
         f = shard_map(local, mesh=mesh, in_specs=in_specs,
-                      out_specs=(P(axes), P(), P()), check_rep=False)
+                      out_specs=out_specs, check_rep=False)
         args = (state, walkers, seed) + (() if u is None else (u,))
         return f(*args)
 

@@ -10,13 +10,20 @@ choice; P2P GPU copies become ICI all-to-all).
 outgoing walkers by destination shard into fixed-size mailboxes, the
 all_to_all rotates mailboxes, and arrivals are compacted locally.
 
-Payloads are multi-field rows: the relay (DESIGN.md §10) ships
-``(vertex, step, slot)`` records so a walker resumes exactly where it
-left off, and the per-step engine ships ``(vertex, walker-id)`` so hops
-keep their walker identity across shards.  Mailbox overflow is *never*
-a silent drop: entries beyond a destination's capacity are returned to
-the sender (``leftover``) with an overflow count, and the relay
-re-enqueues them next round — conservation is exact
+Payloads are multi-field rows keyed by a *destination vertex* in field
+0; everything after it is opaque freight.  The relay (DESIGN.md §10)
+ships two kinds: **walker records** ``(vertex, step, wid)`` — a walker
+resumes at its current vertex's owner, carrying the global walker id
+that keys its PRNG stream and its home-block row — and **path
+records** ``(home-tag, wid, slot, path…)`` — a finished segment's
+columns routed to the walker's *home* shard (the tag is
+``route_tag(home_shard, shard_size)``, a vertex the home shard owns),
+with the sender's slot index riding along so overflow re-pins to the
+slot it came from.  The per-step engine ships ``(vertex, walker-id)``
+so hops keep their identity across shards.  Mailbox overflow is
+*never* a silent drop: entries beyond a destination's capacity are
+returned to the sender (``leftover``) with an overflow count, and the
+relay re-enqueues them next round — conservation is exact
 (``tests/test_distributed.py``).
 """
 
@@ -26,7 +33,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["exchange_walkers", "make_walk_step"]
+__all__ = ["exchange_walkers", "make_walk_step", "route_tag"]
+
+
+def route_tag(shard, shard_size: int):
+    """Destination-vertex tag addressing ``shard`` for payloads routed
+    by *shard* rather than by a real vertex (the relay's path records):
+    ``exchange_walkers`` recovers the shard as ``tag // shard_size``.
+    Negative shards (invalid rows) stay negative, i.e. unrouted."""
+    return jnp.where(shard >= 0, shard * shard_size, -1)
 
 
 def exchange_walkers(payload, shard_size: int, num_shards: int,
@@ -93,7 +108,7 @@ def make_walk_step(sample_local, shard_size: int, num_shards: int,
     is (Wl, 2) int32 ``[global vertex, walker id]`` rows (-1 rows are
     empty): the id field rides the mailbox with the vertex, so a hop
     arriving on another shard still knows *which* walker it advances —
-    the per-step twin of the relay's ``(vertex, step, slot)`` payload.
+    the per-step twin of the relay's ``(vertex, step, wid)`` payload.
     Mailbox leftovers are returned alongside so callers can re-enqueue
     (a bare step has no next round to retry in).
     """

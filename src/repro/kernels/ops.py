@@ -102,7 +102,7 @@ def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, u=None, *,
 
 
 def walk_segment(prob, alias, bias, nbr, deg, frac, starts, t0, seed,
-                 u=None, *, length: int, base_log2: int = 1,
+                 u=None, wid=None, *, length: int, base_log2: int = 1,
                  stop_prob: float = 0.0, uniform: bool = False,
                  force_ref: bool = False, block_b: int = 256):
     """Resumable walk segment: the relay's per-round kernel entry.
@@ -113,17 +113,19 @@ def walk_segment(prob, alias, bias, nbr, deg, frac, starts, t0, seed,
     a ``(vertex, step)`` frontier record (DESIGN.md §10).  ``seed`` is
     the raw (1,) int32 PRNG seed (``seed_from_key``), NOT a JAX key:
     the relay threads one seed through every shard and round so resumed
-    walkers keep their stream.  Returns ``(path (B, length+1),
-    frontier (B, 2))``.
+    walkers keep their stream.  ``wid`` (B,) int32 is the compacted
+    relay's slot→wid map — the hash PRNG keys by global walker id, not
+    by lane (default identity, ``arange(B)``).  Returns
+    ``(path (B, length+1), frontier (B, 2))``.
     """
     if force_ref:
         return _ref.walk_segment_ref(prob, alias, bias, nbr, deg, frac,
-                                     starts, t0, u, length=length,
+                                     starts, t0, u, wid, length=length,
                                      base_log2=base_log2,
                                      stop_prob=stop_prob, uniform=uniform,
                                      seed=seed)
     return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
-                             seed, u, t0, length=length,
+                             seed, u, t0, wid, length=length,
                              base_log2=base_log2, stop_prob=stop_prob,
                              uniform=uniform, segment=True,
                              block_b=block_b, interpret=not on_tpu())

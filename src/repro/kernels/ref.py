@@ -116,14 +116,18 @@ def walk_sample_uniform_ref(nbr, deg, u0):
     return jnp.where(ok, nxt, -1), jnp.where(ok, slot, -1)
 
 
-def hash_uniforms_ref(seed, length: int, B: int):
+def hash_uniforms_ref(seed, length: int, B: int, wid=None):
     """Materialized (L, B, 6) counter-based uniforms — the exact stream
-    the megakernel draws on the fly (``walk_fused.uniforms_at`` with
-    walker id = batch row), for oracles that scan over fed arrays."""
+    the megakernel draws on the fly (``walk_fused.uniforms_at``), for
+    oracles that scan over fed arrays.  ``wid`` (B,) int32 overrides the
+    walker-id column (the compacted relay's slot→wid map); the default
+    is the batch row — the whole-walk identity layout."""
     from repro.kernels.walk_fused import uniforms_at
-    wid = jnp.arange(B, dtype=jnp.int32)[None, :, None]
+    if wid is None:
+        wid = jnp.arange(B, dtype=jnp.int32)
     ts = jnp.arange(length, dtype=jnp.int32)[:, None, None]
-    return uniforms_at(seed[0] if seed.ndim else seed, wid, ts)
+    return uniforms_at(seed[0] if seed.ndim else seed,
+                       wid.astype(jnp.int32)[None, :, None], ts)
 
 
 def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u=None, *,
@@ -178,7 +182,7 @@ def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u=None, *,
 
 
 def walk_segment_ref(prob, alias, bias, nbr, deg, frac, starts, t0,
-                     u=None, *, length: int, base_log2: int = 1,
+                     u=None, wid=None, *, length: int, base_log2: int = 1,
                      stop_prob: float = 0.0, uniform: bool = False,
                      seed=None):
     """Resumable-segment oracle (DESIGN.md §10): windowed L-step scan.
@@ -190,14 +194,15 @@ def walk_segment_ref(prob, alias, bias, nbr, deg, frac, starts, t0,
     (adjacency value ``-(g + 2)``) is sampled — the walker then exits
     with a ``(g, step)`` frontier record.  ``starts < 0`` marks free
     slots.  Uniforms per step t come from ``u[t]`` when fed, else from
-    the counter-based ``(seed, walker row, t)`` hash — identical columns
-    and semantics to the kernel, bit-exact in both modes.  Returns
-    ``(path (B, L+1), frontier (B, 2))``.
+    the counter-based ``(seed, wid[b], t)`` hash, where ``wid`` is the
+    compacted relay's slot→wid map (default: the batch row) — identical
+    columns and semantics to the kernel, bit-exact in both modes.
+    Returns ``(path (B, L+1), frontier (B, 2))``.
     """
     B = starts.shape[0]
     L = length
     if u is None:
-        u = hash_uniforms_ref(seed, L, B)
+        u = hash_uniforms_ref(seed, L, B, wid)
     if u.shape[-1] < 6:
         raise ValueError(
             f"fed uniforms must be (L, B, 6); got {u.shape}")

@@ -43,7 +43,12 @@ the caller), and walks the remaining ``L - t0`` steps.  Adjacency rows
 may encode *remote* neighbors as ``-(global_id + 2)``: a walker that
 samples one exits with a ``(vertex, step)`` frontier record instead of
 dying, which is what the relay routes to the vertex's owner shard.
-Slots with ``starts < 0`` are free and emit all -1.
+Slots with ``starts < 0`` are free and emit all -1.  Because the relay
+packs walkers into *compacted* slots (slot index != walker id), the
+segment entry also takes a slot→wid map ``wid`` (B,) int32: the hash
+PRNG draws with the *mapped* global walker id, so a walker keeps its
+stream no matter which lane of which shard it currently occupies
+(default ``wid = arange(B)``, the whole-walk identity layout).
 
 Uniform column layout (hashed or fed, 6 lanes per walker per step):
 ``u0`` alias bucket, ``u1`` alias coin, ``u2`` member pick, ``u3``
@@ -116,6 +121,7 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
     seed_ref = refs.pop(0)                     # (1,) SMEM
     starts_ref = refs.pop(0)                   # (Bt, 1) VMEM
     t0_ref = refs.pop(0) if segment else None  # (Bt, 1) VMEM
+    wid_ref = refs.pop(0) if segment else None  # (Bt, 1) VMEM slot→wid
     u_ref = refs.pop(0) if has_u else None     # (L, Bt, 6) VMEM
     if uniform:
         nbr_hbm, deg_hbm = refs.pop(0), refs.pop(0)
@@ -132,11 +138,15 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
     bufs = tuple(refs.pop(0) for _ in tabs)    # (2, Bt, ·) VMEM each
     state_v, state_s, gsem, ssem = refs        # VMEM/SMEM (Bt,2), DMA sems
 
-    # Walker identity for the counter-based PRNG: the global batch row.
-    # The relay keeps slot == walker id by construction, so this is the
-    # cross-shard-stable id the resume contract needs.
-    wid = (pl.program_id(0) * Bt
-           + jax.lax.broadcasted_iota(jnp.int32, (Bt, 1), 0))
+    # Walker identity for the counter-based PRNG.  Whole walks use the
+    # global batch row; segments read the slot→wid map instead — the
+    # relay packs walkers into compacted slots, so the cross-shard-
+    # stable id the resume contract needs is NOT the lane index.
+    if segment:
+        wid = wid_ref[...]                               # (Bt, 1)
+    else:
+        wid = (pl.program_id(0) * Bt
+               + jax.lax.broadcasted_iota(jnp.int32, (Bt, 1), 0))
 
     def row_copies(slot, b, v):
         """The DMA set staging vertex ``v``'s rows into buffer ``slot``."""
@@ -255,7 +265,8 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
     static_argnames=("length", "base_log2", "stop_prob", "uniform",
                      "segment", "block_b", "interpret"))
 def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
-                      u=None, t0=None, *, length: int, base_log2: int = 1,
+                      u=None, t0=None, wid=None, *, length: int,
+                      base_log2: int = 1,
                       stop_prob: float = 0.0, uniform: bool = False,
                       segment: bool = False, block_b: int = 256,
                       interpret: bool = False):
@@ -276,7 +287,10 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     slots, adjacency values ``<= -2`` are remote neighbors encoded as
     ``-(global_id + 2)``, and the return becomes ``(path, frontier)``
     with ``frontier`` (B, 2) int32 ``[vertex, step]`` exit records
-    (-1 where the walker finished locally).
+    (-1 where the walker finished locally).  ``wid`` (B,) int32 is the
+    slot→wid map of the compacted relay: the hash PRNG is keyed by
+    ``wid[b]``, not by the lane index ``b`` (default ``arange(B)`` —
+    identity, i.e. the uncompacted layout).
 
     Returns the (B, length+1) int32 path; column ``t0`` (0 for whole
     walks) is the start vertex, columns outside a walker's segment
@@ -297,6 +311,8 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     grid = (pl.cdiv(B, block_b),)
     if segment and t0 is None:
         t0 = jnp.zeros((B,), jnp.int32)
+    if segment and wid is None:
+        wid = jnp.arange(B, dtype=jnp.int32)
 
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),              # seed
@@ -306,6 +322,8 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     if segment:
         in_specs.append(pl.BlockSpec((block_b, 1), lambda i: (i, 0)))
         args.append(t0[:, None])
+        in_specs.append(pl.BlockSpec((block_b, 1), lambda i: (i, 0)))
+        args.append(wid[:, None])
     if has_u:
         in_specs.append(
             pl.BlockSpec((length, block_b, NUM_UNIFORMS),

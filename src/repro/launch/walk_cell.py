@@ -16,12 +16,14 @@ Shapes: ``walk_step``  — one synchronous step of all walkers (sample +
         TPU — with no per-step exchange (the asynchronous-engine mode:
         walks stay shard-local, paths are gathered once at the end);
         ``walk_relay`` — the exact sharded whole walk (DESIGN.md §10):
-        bulk-synchronous super-steps of the *resumable* megakernel —
-        each round every shard walks its residents as one segment,
-        walkers whose hop leaves the shard ride a (vertex, step, slot)
-        all_to_all mailbox to their new owner and resume there, and the
-        stitched paths are bit-identical to the single-shard walk (the
-        fix for walk_whole's boundary truncation);
+        bulk-synchronous super-steps of the *resumable* megakernel over
+        slot-compacted (W/S + slack) resident arrays — each round every
+        shard walks its residents as one segment, walkers whose hop
+        leaves the shard ride a (vertex, step, wid) all_to_all mailbox
+        to their new owner and resume there, path columns route to the
+        walker's home shard block, and the concatenated home blocks are
+        bit-identical to the single-shard walk (the fix for
+        walk_whole's boundary truncation, at O(W/S) resident state);
         ``update_step`` — one batched graph update (100K updates) through
         ``backend.apply_updates`` (DESIGN.md §9);
         ``update_walk`` — the streaming-serving round (DESIGN.md §9):
@@ -218,14 +220,20 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
         engine = get_backend(bcfg.backend)
         wparams = WalkParams(kind="deepwalk", length=L)
 
-        # The super-step relay (DESIGN.md §10): per round, every shard
-        # runs ONE resumable megakernel segment over its residents,
-        # exiting walkers ride one (vertex, step, slot) all_to_all
-        # mailbox to their next owner, arrivals resume at their recorded
-        # step, and mailbox overflow is re-enqueued — looping until no
-        # walker is live anywhere.  Unlike walk_whole nothing truncates:
-        # the stitched (W, L+1) paths are bit-identical to the
-        # single-shard walk at any shard count.
+        # The slot-compacted super-step relay (DESIGN.md §10): per
+        # round, every shard runs ONE resumable megakernel segment over
+        # its Wl = W/S + slack compacted slots (free-list placement;
+        # the slot→wid map keys the PRNG), exiting walkers ride a
+        # (vertex, step, wid) all_to_all mailbox to their next owner,
+        # finished segments' path columns ride a (home-tag, wid, slot,
+        # path) mailbox to the walker's home shard's (W/S, L+1) block,
+        # and overflow of either is re-enqueued — looping until no
+        # walker is live anywhere.  Unlike walk_whole nothing
+        # truncates: the home blocks concatenate to (W, L+1) paths
+        # bit-identical to the single-shard walk at any shard count —
+        # and unlike the wid-indexed PR-4 layout (~62 GiB/dev at FULL,
+        # unfit) the resident state is O(W/S), so FULL must now FIT
+        # (CI gates hbm_fit on this cell's dry-run).
         walk_relay = make_relay(engine, bcfg, wparams, mesh)
 
         rep = NamedSharding(mesh, P())

@@ -31,10 +31,13 @@ the same surface off a vertex-partitioned state (§9.1).  Updates are
 routed to owner shards by an ownership mask and applied shard-locally
 (one update-megakernel launch per shard); walks run the bulk-
 synchronous ``walk_relay`` super-steps — resumable megakernel segments
-plus ``(vertex, step, slot)`` all_to_all mailboxes — so served paths
-are *bit-identical* to the single-device engine for the same key, at
-any shard count.  The donated-state discipline is unchanged: one
-sharded ``BingoState`` threads through every ingest and walk.
+over slot-compacted O(W/S) resident arrays, walker and path-record
+all_to_all mailboxes — so served paths are *bit-identical* to the
+single-device engine for the same key, at any shard count, with
+per-shard walk state sized to active residents rather than the global
+walker count.  The serving API is unchanged by the compaction.  The
+donated-state discipline is unchanged too: one sharded ``BingoState``
+threads through every ingest and walk.
 """
 
 from __future__ import annotations

@@ -1,0 +1,156 @@
+"""Slot-compacted relay: allocator edge cases (DESIGN.md §10).
+
+The compacted relay holds ``Wl = W/S + slack`` resident slots per shard
+instead of ``W``; these tests pin the allocator paths the bit-exactness
+suite (``test_walk_relay.py``) only exercises incidentally: free-list
+exhaustion (queued walkers exceed open slots — both at placement time
+and mid-relay when arrivals funnel onto one shard), ``slack=0`` sizing,
+slot counts that are not a multiple of the kernel's lane tile, and the
+``diagnostics`` occupancy channel.  Exactness must never depend on the
+allocator having room: exhaustion only adds rounds.  Multi-shard cases
+need the 8 fake host devices of the walk-relay CI job.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walks
+from repro.core.backend import get_backend
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.distributed.relay import make_relay, slot_count
+from repro.kernels.ops import seed_from_key
+from tests.test_walk_relay import _state
+
+DEVS = len(jax.devices())
+multi = pytest.mark.skipif(
+    DEVS < 8, reason="needs 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _run(st, cfg, params, walkers, seed, u=None, *, num_shards, **kw):
+    mesh = jax.make_mesh((num_shards,), ("data",))
+    relay = make_relay(get_backend("pallas"), cfg, params, mesh, **kw)
+    return relay(st, walkers, seed, u)
+
+
+def test_slot_count_rule():
+    """The slack sizing rule: Wl = min(W, W/S + slack), default slack
+    max(8, half a home block), slack=0 legal, negatives rejected."""
+    assert slot_count(4096, 8) == 512 + 256
+    assert slot_count(64, 8) == 8 + 8          # floor kicks in
+    assert slot_count(64, 8, slack=0) == 8
+    assert slot_count(64, 1) == 64             # never exceeds W
+    with pytest.raises(ValueError, match="slack"):
+        slot_count(64, 8, slack=-1)
+
+
+@multi
+@pytest.mark.parametrize("slack", [0, 1])
+def test_relay_slack_zero_stays_exact(slack):
+    """slack=0 (one home block of slots, zero burst headroom) and
+    slack=1 must still be bit-exact vs the single-shard walk — tight
+    sizing costs rounds, never correctness."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas", uniforms=u)
+    paths, rounds, _ = _run(st, cfg, params, walkers, seed_from_key(key),
+                            u, num_shards=8, slot_slack=slack)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    assert int(rounds) >= 1
+
+
+@multi
+def test_relay_freelist_exhaustion_at_placement():
+    """Every walker starts on shard 0's vertices while slack=0 gives it
+    only Wl = W/S slots: the free list exhausts immediately, the queue
+    drains Wl walkers per round, and the result is still bit-exact —
+    with the extra rounds and a peak occupancy pinned at Wl."""
+    st, cfg = _state()
+    S, B, L = 8, 24, 10
+    shard_size = cfg.num_vertices // S
+    Wl = slot_count(B, S, slack=0)                    # = 3
+    walkers = jnp.arange(B, dtype=jnp.int32) % shard_size   # all shard 0
+    key = jax.random.key(5)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas", uniforms=u)
+    paths, rounds, _, peak = _run(
+        st, cfg, params, walkers, seed_from_key(key), u, num_shards=S,
+        slot_slack=0, diagnostics=True)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    # 24 queued walkers through 3 slots need >= 8 placement waves
+    assert int(rounds) >= B // Wl
+    assert int(peak) == Wl
+
+
+@multi
+def test_relay_arrival_burst_exceeds_open_slots():
+    """Mid-relay exhaustion: a funnel graph sends every walker to shard
+    0 after one hop, where slack=0 leaves at most Wl open slots per
+    round.  Arrivals queue (never drop), paths stay full length and
+    bit-exact — conservation under arrival bursts."""
+    S, shard_size = 8, 4
+    V = S * shard_size
+    src = np.arange(V, dtype=np.int32)
+    dst = src % shard_size                 # every neighbor on shard 0
+    cfg = BingoConfig(num_vertices=V, capacity=4, bias_bits=3)
+    st = from_edges(cfg, src, dst, np.ones(V, np.int32) * 2)
+    B, L = 24, 6
+    walkers = jnp.arange(B, dtype=jnp.int32) % V       # spread start
+    key = jax.random.key(2)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    paths, rounds, _, peak = _run(
+        st, cfg, params, walkers, seed_from_key(key), num_shards=S,
+        slot_slack=0, diagnostics=True)
+    paths = np.asarray(paths)
+    np.testing.assert_array_equal(paths, np.asarray(single))
+    assert (paths >= 0).all()              # deg >= 1 everywhere: no death
+    assert int(peak) == slot_count(B, S, slack=0)
+    assert int(rounds) > L                 # the funnel forces queueing
+
+
+@multi
+def test_relay_slots_off_lane_tile():
+    """Wl = 3 (neither a multiple of the 8-lane vector tile nor of the
+    kernel's block_b) must walk correctly: padding lanes are dead via
+    the free-slot/alive mask, so ragged compacted slot arrays cannot
+    fabricate walkers."""
+    st, cfg = _state(seed=11)
+    B, L = 24, 8
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(3)
+    params = walks.WalkParams(kind="ppr", length=L, stop_prob=0.1)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    paths, _, _ = _run(st, cfg, params, walkers, seed_from_key(key),
+                       num_shards=8, slot_slack=0)    # Wl = 3
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+
+
+def test_relay_diagnostics_channel():
+    """diagnostics=True appends peak slot occupancy as a 4th replicated
+    output (any shard count — here 1, where Wl == W and every walker
+    places in round 1); the default 3-tuple API is unchanged."""
+    st, cfg = _state()
+    B, L = 16, 6
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    seed = jnp.array([7], jnp.int32)
+    out3 = _run(st, cfg, params, walkers, seed, num_shards=1)
+    assert len(out3) == 3
+    paths, rounds, ovf, peak = _run(st, cfg, params, walkers, seed,
+                                    num_shards=1, diagnostics=True)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(out3[0]))
+    assert int(rounds) == 1 and int(ovf) == 0
+    assert int(peak) == B                  # S=1: all residents at once
