@@ -15,6 +15,7 @@ no ``BingoState`` copies.  ``benchmarks/run.py`` persists the rows into
 
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import (build_state, dataset_stream, record,
                                record_sizing, update_rate)
 from repro.graph.streams import rounds_on_device
@@ -24,16 +25,28 @@ BATCH = 256
 ROUNDS = 3
 BACKENDS = ("reference", "pallas")
 
+MICRO_SCALE = 7
+MICRO_BATCH = 64
+
 
 def main():
-    record_sizing("updates", num_vertices=1 << SCALE, update_batch=BATCH,
+    from repro.kernels.ops import on_tpu
+    scale = MICRO_SCALE if common.MICRO else SCALE
+    batch = MICRO_BATCH if common.MICRO else BATCH
+    # under --compiled off-TPU the pallas update megakernel only exists
+    # in interpret mode — timing it would smuggle an emulated number
+    # into an interpret=false snapshot, so the row is pruned
+    backends = BACKENDS
+    if common.COMPILED and not on_tpu():
+        backends = ("reference",)
+    record_sizing("updates", num_vertices=1 << scale, update_batch=batch,
                   rounds=ROUNDS, capacity=128)
     for mode in ("insertion", "deletion", "mixed"):
-        V, stream = dataset_stream(SCALE, batch_size=BATCH, rounds=ROUNDS,
+        V, stream = dataset_stream(scale, batch_size=batch, rounds=ROUNDS,
                                    mode=mode)
         st, cfg = build_state(V, stream.init_src, stream.init_dst,
                               stream.init_w, capacity=128)
-        for backend in BACKENDS:
+        for backend in backends:
             rate = update_rate(
                 st, cfg, rounds_on_device(stream), backend=backend)
             record("updates", f"{mode}-{backend}", "updates_per_s", rate)

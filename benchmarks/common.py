@@ -23,6 +23,21 @@ from repro.graph.streams import make_update_stream
 ROWS: list[dict] = []
 SIZING: dict[str, dict] = {}
 
+# ``run.py --compiled`` sets these before dispatching bench modules.
+# COMPILED: time XLA-compiled programs only — on CPU (where pallas
+# supports interpret mode exclusively) the fused rows route through the
+# jnp megawalk oracle and interpret-emulated paths are pruned; on TPU
+# the same flag times the real Mosaic kernels.  MICRO: dry-run-scale
+# sizing so CI can take a compiled snapshot in seconds.
+COMPILED = False
+MICRO = False
+
+
+def set_mode(*, compiled: bool = False, micro: bool = False) -> None:
+    global COMPILED, MICRO
+    COMPILED = compiled
+    MICRO = micro
+
 
 def record(bench: str, case: str, metric: str, value: float):
     ROWS.append({"bench": bench, "case": case, "metric": metric,
@@ -77,18 +92,29 @@ def state_nbytes(state) -> int:
 
 
 def walk_rate(state, cfg, params, starts, *, backend=None, whole_walk=None,
-              seed: int = 0, reps: int = 3) -> float:
+              seed: int = 0, reps: int = 3, donated=None,
+              return_state: bool = False):
     """Steps/second of one jitted walk call via ``walks.make_walker``.
 
     The walker donates and threads the state through (zero-copy across
     repeated calls — the ``donate_argnums`` contract), so this measures
     the walk itself, not per-call ``BingoState`` traffic.
+
+    Pass ``donated=`` (a donation-safe ``BingoState`` copy) together
+    with ``return_state=True`` to re-use ONE such copy across a whole
+    sweep of ``walk_rate`` calls: each call consumes the donated
+    buffers and hands back the threaded state for the next call, so a
+    K-row × kind sweep materializes the full tables exactly once
+    instead of once per timed case.  Without ``donated`` the call makes
+    its own private copy (the single-measurement behavior).
     """
     from repro.core.walks import make_walker
     run = make_walker(state, cfg, params, backend=backend,
                       whole_walk=whole_walk)
     key = jax.random.key(seed)
-    st = jax.tree.map(jnp.copy, state)   # donation-safe private copy
+    if donated is None:
+        donated = jax.tree.map(jnp.copy, state)  # donation-safe copy
+    st = donated
     st, _ = jax.block_until_ready(run(st, starts, key))   # warmup/compile
     ts = []
     for _ in range(reps):
@@ -97,7 +123,8 @@ def walk_rate(state, cfg, params, starts, *, backend=None, whole_walk=None,
         jax.block_until_ready(path)
         ts.append(time.perf_counter() - t0)
     secs = float(np.median(ts))
-    return starts.shape[0] * params.length / max(secs, 1e-9)
+    rate = starts.shape[0] * params.length / max(secs, 1e-9)
+    return (rate, st) if return_state else rate
 
 
 def dataset_stream(scale=11, *, batch_size=512, rounds=4, mode="mixed",

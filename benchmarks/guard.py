@@ -1,0 +1,72 @@
+"""CI guard: the cohort-interleaved kernel must not lose to K=1.
+
+Reads the newest ``interpret: false`` snapshot of BENCH_walks.json and
+computes, per walk kind, ``best_{K>=2}(steps/s) / steps/s(K=1)``, then
+fails (exit 1) if the geometric mean over kinds drops below
+``--min-ratio``.
+
+Why tolerance instead of strict ``K2 >= K1``: on the compiled-CPU path
+(the only compiled path CI has) the K rows all time the jnp megawalk
+oracle — the same XLA program, because the oracle is cohort-invariant
+by construction — so their spread is pure timing noise.  The guard's
+job there is to catch wiring rot (missing K rows, a snapshot that
+stopped being compiled, a pathological slowdown), not to referee noise;
+on TPU the same guard with the same threshold genuinely compares three
+Mosaic kernels and catches an interleaving regression.
+
+  python -m benchmarks.guard [--walks BENCH_walks.json] [--min-ratio 0.8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+
+def cohort_ratios(snap: dict) -> dict:
+    """kind -> best_{K>=2}/K1 steps/s ratio for one snapshot."""
+    by_kind: dict = {}
+    for case, v in snap.get("cases", {}).items():
+        m = re.match(r"(.+)-pallas-fused-K(\d+)$", case)
+        if m:
+            by_kind.setdefault(m.group(1), {})[int(m.group(2))] = float(v)
+    out = {}
+    for kind, ks in sorted(by_kind.items()):
+        if 1 not in ks or not any(k >= 2 for k in ks):
+            continue
+        out[kind] = max(v for k, v in ks.items() if k >= 2) / ks[1]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--walks", default="BENCH_walks.json")
+    ap.add_argument("--min-ratio", type=float, default=0.8)
+    args = ap.parse_args()
+    with open(args.walks) as f:
+        doc = json.load(f)
+    snaps = [s for s in (doc.get("snapshots") or [doc])
+             if not s.get("env", {}).get("interpret", True)]
+    if not snaps:
+        print("guard: no interpret=false snapshot in", args.walks)
+        return 1
+    ratios = cohort_ratios(snaps[-1])
+    if not ratios:
+        print("guard: compiled snapshot has no K=1 + K>=2 fused rows")
+        return 1
+    gm = math.exp(sum(math.log(r) for r in ratios.values()) / len(ratios))
+    for kind, r in ratios.items():
+        print(f"guard: {kind}: best(K>=2)/K1 = {r:.3f}")
+    print(f"guard: geomean = {gm:.3f} (min {args.min_ratio})")
+    if gm < args.min_ratio:
+        print("guard: FAIL — cohort-interleaved kernel lost to K=1")
+        return 1
+    print("guard: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

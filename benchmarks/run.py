@@ -45,21 +45,40 @@ def _bench_env() -> dict:
     pallas paths emulate the kernel program instruction by instruction
     and predictably lose to plain XLA — must never be diffed as a perf
     trajectory.  (The CPU-CI snapshots showing pallas-fused behind
-    reference are exactly that artifact.)"""
+    reference are exactly that artifact.)
+
+    ``interpret`` is false whenever only compiled programs were timed:
+    on TPU always; elsewhere under ``--compiled``, which routes every
+    timed case through XLA (``benchmarks/common.COMPILED``)."""
     import jax
+    from benchmarks import common
     from repro.kernels.ops import on_tpu
     return {
         "platform": jax.default_backend(),
         "device_count": jax.device_count(),
-        "interpret": not on_tpu(),
+        "interpret": not (on_tpu() or common.COMPILED),
         "jax": jax.__version__,
     }
 
 
+def _snap_key(snap: dict):
+    """The identity of one snapshot: env stamp + sizing.  Two runs with
+    the same key are re-measurements of the same experiment (the newer
+    wins); any difference — platform, interpret mode, device count, or
+    problem sizing — makes them distinct experiments that must coexist
+    in the file instead of clobbering each other."""
+    return (json.dumps(snap.get("env", {}), sort_keys=True),
+            json.dumps(snap.get("sizing", {}), sort_keys=True))
+
+
 def _write_bench_json(path: str, bench: str, metric: str) -> None:
-    """Persist one bench's rows as a {case: value} JSON snapshot, plus
-    the environment/sizing stamp and any secondary metrics (e.g. the
-    relay's rounds_to_completion / peak_slot_occupancy) under
+    """Persist one bench's rows as a {case: value} JSON snapshot under
+    ``snapshots``, *merged by (env, sizing) stamp* with whatever the
+    file already holds — so a compiled run lands next to the interpret
+    baseline rather than overwriting it.  Pre-existing single-snapshot
+    files (the PR-5 format: ``cases`` at top level) are converted to
+    one snapshot on first merge.  Secondary metrics (e.g. the relay's
+    rounds_to_completion / peak_slot_occupancy) ride along in
     ``extras``."""
     from benchmarks.common import SIZING
     rows = {r["case"]: r["value"] for r in ROWS
@@ -68,14 +87,30 @@ def _write_bench_json(path: str, bench: str, metric: str) -> None:
         return
     extras = {f"{r['case']}.{r['metric']}": r["value"] for r in ROWS
               if r["bench"] == bench and r["metric"] != metric}
-    doc = {"bench": bench, "metric": metric, "env": _bench_env(),
-           "sizing": SIZING.get(bench, {}), "cases": rows}
+    snap = {"env": _bench_env(), "sizing": SIZING.get(bench, {}),
+            "cases": rows}
     if extras:
-        doc["extras"] = extras
+        snap["extras"] = extras
+
+    snapshots = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except ValueError:
+            old = {}
+        if "snapshots" in old:
+            snapshots = list(old["snapshots"])
+        elif "cases" in old:                 # PR-5 single-snapshot format
+            snapshots = [{k: old[k] for k in ("env", "sizing", "cases",
+                                              "extras") if k in old}]
+    snapshots = [s for s in snapshots if _snap_key(s) != _snap_key(snap)]
+    snapshots.append(snap)
+    doc = {"bench": bench, "metric": metric, "snapshots": snapshots}
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {path}", flush=True)
+    print(f"# wrote {path} ({len(snapshots)} snapshot(s))", flush=True)
 
 
 def _dry_fused_smoke() -> None:
@@ -176,8 +211,20 @@ def main() -> None:
                     help="import-check every bench module, run the fused "
                          "whole-walk smoke, and exit without timing "
                          "anything (CI smoke)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="time XLA-compiled programs only and stamp the "
+                         "snapshots interpret=false: real Mosaic kernels "
+                         "on TPU; on CPU the fused rows route through the "
+                         "jnp megawalk oracle and interpret-emulated "
+                         "paths are pruned (benchmarks/bench_walks.py)")
+    ap.add_argument("--micro", action="store_true",
+                    help="dry-run-scale sizing (seconds, for CI compiled "
+                         "snapshots); stamped into sizing so it can never "
+                         "be diffed against a full-scale snapshot")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    from benchmarks import common as _common
+    _common.set_mode(compiled=args.compiled, micro=args.micro)
 
     if args.dry:
         from repro.core.backend import available_backends

@@ -233,7 +233,7 @@ class PallasBackend:
             state.itable.prob, state.itable.alias, state.bias, state.nbr,
             state.deg, state.frac if cfg.fp_bias else None, starts, key, u,
             length=params.length, base_log2=cfg.base_log2, stop_prob=stop,
-            uniform=params.kind == "simple")
+            uniform=params.kind == "simple", cohorts=cfg.cohorts)
 
     def sample_walk_segment(self, state, cfg, starts, t0, seed, params,
                             u=None, wid=None):
@@ -251,7 +251,8 @@ class PallasBackend:
             state.itable.prob, state.itable.alias, state.bias, state.nbr,
             state.deg, state.frac if cfg.fp_bias else None, starts, t0,
             seed, u, wid, length=params.length, base_log2=cfg.base_log2,
-            stop_prob=stop, uniform=params.kind == "simple")
+            stop_prob=stop, uniform=params.kind == "simple",
+            cohorts=cfg.cohorts)
 
     def apply_updates(self, state, cfg, is_insert, u, v, w, active=None):
         from repro.kernels import ops

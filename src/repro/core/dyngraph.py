@@ -61,6 +61,9 @@ class BingoConfig:
     backend: str = "auto"         # sampler backend (core/backend.py):
                                   # reference | pallas | auto (= pallas on
                                   # TPU, reference elsewhere)
+    cohorts: int = 1              # walk-megakernel cohort interleaving
+                                  # factor K (DESIGN.md §8) — bit-exact
+                                  # for every K; purely a perf knob
 
     @property
     def num_radix(self) -> int:

@@ -143,6 +143,12 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     mailboxes per (sender, destination) pair — overflow of either is
     re-enqueued, never dropped.
 
+    ``lcfg.cohorts`` (inherited from the global config by the
+    ``dataclasses.replace`` in ``walk_relay``) reaches the segment
+    megakernel unchanged, so cross-shard rounds get the same DMA-hiding
+    cohort interleaving as single-shard whole walks — and because the
+    PRNG keys by (seed, wid, t), any K yields the bit-identical relay.
+
     Returns ``(paths (W//num_shards, L+1) int32, rounds, overflow)`` —
     this shard's *home block* of the stitched global path array (vertex
     ids global, the ``random_walk`` contract; walker ``wid``'s row

@@ -75,7 +75,7 @@ def seed_from_key(key):
 def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, u=None, *,
                length: int, base_log2: int = 1, stop_prob: float = 0.0,
                uniform: bool = False, force_ref: bool = False,
-               block_b: int = 256):
+               block_b: int = 256, cohorts: int = 1):
     """Whole-walk entry: one resident megakernel launch for all L steps.
 
     Tables are the full ``BingoState`` arrays (see
@@ -86,25 +86,31 @@ def walk_fused(prob, alias, bias, nbr, deg, frac, starts, key, u=None, *,
     and the ``force_ref`` jnp oracle — where HLO cost analysis needs
     real FLOPs), and the same stream a relay-resumed segment of this
     walk would draw on another shard (DESIGN.md §10).  Pass ``u``
-    (L, B, 6) to pin an explicit stream instead.  Returns the
-    (B, length+1) int32 path.
+    (L, B, 6) to pin an explicit stream instead.  ``cohorts=K`` turns
+    on the kernel's cohort interleaving (DESIGN.md §8) — output is
+    bit-identical for every K, so the jnp oracle (which has no cohort
+    notion) stays the ground truth and ``force_ref`` simply ignores it.
+    Returns the (B, length+1) int32 path.
     """
     seed = seed_from_key(key)
     if force_ref:
         return _ref.walk_fused_ref(prob, alias, bias, nbr, deg, frac,
                                    starts, u, base_log2=base_log2,
                                    stop_prob=stop_prob, uniform=uniform,
-                                   seed=seed, length=length)
+                                   seed=seed, length=length,
+                                   cohorts=cohorts)
     return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
                              seed, u, length=length, base_log2=base_log2,
                              stop_prob=stop_prob, uniform=uniform,
-                             block_b=block_b, interpret=not on_tpu())
+                             block_b=block_b, cohorts=cohorts,
+                             interpret=not on_tpu())
 
 
 def walk_segment(prob, alias, bias, nbr, deg, frac, starts, t0, seed,
                  u=None, wid=None, *, length: int, base_log2: int = 1,
                  stop_prob: float = 0.0, uniform: bool = False,
-                 force_ref: bool = False, block_b: int = 256):
+                 force_ref: bool = False, block_b: int = 256,
+                 cohorts: int = 1):
     """Resumable walk segment: the relay's per-round kernel entry.
 
     Same tables as ``walk_fused`` but with per-walker start steps ``t0``
@@ -123,12 +129,13 @@ def walk_segment(prob, alias, bias, nbr, deg, frac, starts, t0, seed,
                                      starts, t0, u, wid, length=length,
                                      base_log2=base_log2,
                                      stop_prob=stop_prob, uniform=uniform,
-                                     seed=seed)
+                                     seed=seed, cohorts=cohorts)
     return walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts,
                              seed, u, t0, wid, length=length,
                              base_log2=base_log2, stop_prob=stop_prob,
                              uniform=uniform, segment=True,
-                             block_b=block_b, interpret=not on_tpu())
+                             block_b=block_b, cohorts=cohorts,
+                             interpret=not on_tpu())
 
 
 def update_fused(state, cfg, is_insert, u, v, w, active=None, *,

@@ -132,8 +132,15 @@ def hash_uniforms_ref(seed, length: int, B: int, wid=None):
 
 def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u=None, *,
                    base_log2: int = 1, stop_prob: float = 0.0,
-                   uniform: bool = False, seed=None, length=None):
+                   uniform: bool = False, seed=None, length=None,
+                   cohorts: int = 1):
     """Whole-walk oracle: the L-step scan under fed (or hashed) uniforms.
+
+    ``cohorts`` is accepted (so ``ops.walk_fused(force_ref=True)`` takes
+    the same signature) and ignored: the oracle has no DMA pipeline, and
+    the kernel's output is provably K-invariant — the counter PRNG keys
+    by (seed, wid, t), never by cohort/slot — so this single scan is
+    the ground truth for every K.
 
     The pure-jnp ground truth for ``kernels/walk_fused.py`` — same
     (L, B, 6) uniform columns (alias bucket, alias coin, member pick,
@@ -184,8 +191,11 @@ def walk_fused_ref(prob, alias, bias, nbr, deg, frac, starts, u=None, *,
 def walk_segment_ref(prob, alias, bias, nbr, deg, frac, starts, t0,
                      u=None, wid=None, *, length: int, base_log2: int = 1,
                      stop_prob: float = 0.0, uniform: bool = False,
-                     seed=None):
+                     seed=None, cohorts: int = 1):
     """Resumable-segment oracle (DESIGN.md §10): windowed L-step scan.
+
+    ``cohorts`` is accepted and ignored, exactly as in
+    ``walk_fused_ref`` — one scan pins all K.
 
     The pure-jnp ground truth for the megakernel's ``segment=True``
     entry.  Per walker: idle until step ``t0`` (start vertex written at

@@ -16,9 +16,28 @@ Structure per walker tile of Bt:
     HBM-resident operands (``memory_space=ANY``) — nothing (B, C)-shaped
     ever materializes in HBM;
   * per step, only the *current* walkers' rows are DMA'd into VMEM
-    scratch via ``pltpu.make_async_copy``, double-buffered over two slots
-    so the step-(t+1) gather (issued the moment step t's sample lands)
-    overlaps step t's path write, alive bookkeeping, and uniform draw;
+    scratch via ``pltpu.make_async_copy``.  With ``cohorts=1`` the
+    scratch is double-buffered over two slots so the step-(t+1) gather
+    (issued the moment step t's sample lands) overlaps step t's path
+    write, alive bookkeeping, and uniform draw — but the *sample* of
+    step t+1 still waits on its own DMA with nothing upstream to hide
+    under (the next vertex is data-dependent);
+  * **cohort interleaving** (``cohorts=K`` ∈ {2, 4}, ThunderRW's core
+    technique): the walker tile is split into K cohorts of Bt/K lanes,
+    and the step loop is software-pipelined over K *phases* per step —
+    cohort c's step-(t+1) row DMA is issued at the end of its phase and
+    waited K−1 phases later, so it runs under the full ``sample_rows``
+    compute of the other K−1 cohorts instead of under bookkeeping only.
+    The 2-slot ping-pong becomes a rotated schedule of K per-cohort
+    VMEM slots (slot c is only rewritten after cohort c's sample
+    consumed it, so one slot per cohort suffices — total row scratch
+    *shrinks* from 2·Bt to Bt rows); per-cohort alive flags live in the
+    same SMEM mirror, synced one cohort-slice at a time so a phase
+    never perturbs another cohort's DMA predicates.  Cohort assignment
+    provably cannot change any walker's stream: uniforms are keyed by
+    ``(seed, wid, t)`` (below), never by lane, phase, or slot — so any
+    K produces bit-identical paths (pinned by ``tests/test_kernels.py``
+    against K=1 and the jnp oracle);
   * walker state (cur | alive) lives in VMEM scratch, mirrored to SMEM
     once per step (one (Bt, 2) DMA) because DMA descriptors need scalar
     indices; dead walkers (PPR termination, dead ends) skip their row
@@ -114,8 +133,10 @@ def uniforms_at(seed, wid, t, ncols: int = NUM_UNIFORMS):
 
 
 def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
-            segment, block_b, num_verts, *refs):
+            segment, block_b, num_verts, cohorts, *refs):
     Bt = block_b
+    K = cohorts
+    Bc = Bt // K                               # cohort lane count
     # --- unpack refs: inputs, outputs, scratch (order fixed by pallas_call)
     refs = list(refs)
     seed_ref = refs.pop(0)                     # (1,) SMEM
@@ -135,73 +156,91 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
             tabs += (frac_hbm,)
     out_ref = refs.pop(0)                      # (Bt, L+1) VMEM
     fr_ref = refs.pop(0) if segment else None  # (Bt, 2) VMEM
-    bufs = tuple(refs.pop(0) for _ in tabs)    # (2, Bt, ·) VMEM each
+    bufs = tuple(refs.pop(0) for _ in tabs)    # (nslots, rows, ·) VMEM
     state_v, state_s, gsem, ssem = refs        # VMEM/SMEM (Bt,2), DMA sems
 
-    # Walker identity for the counter-based PRNG.  Whole walks use the
-    # global batch row; segments read the slot→wid map instead — the
-    # relay packs walkers into compacted slots, so the cross-shard-
-    # stable id the resume contract needs is NOT the lane index.
+    # Walker identity for the counter-based PRNG, hoisted out of the
+    # step loop (``pl.program_id`` must sit at kernel top level).
+    # Whole walks use the global batch row; segments read the slot→wid
+    # map instead — the relay packs walkers into compacted slots, so
+    # the cross-shard-stable id the resume contract needs is NOT the
+    # lane index.  Keyed by wid and t only: cohort geometry cannot
+    # change any walker's stream.
     if segment:
-        wid = wid_ref[...]                               # (Bt, 1)
+        wid_all = None                  # read from wid_ref per phase
     else:
-        wid = (pl.program_id(0) * Bt
-               + jax.lax.broadcasted_iota(jnp.int32, (Bt, 1), 0))
+        wid_all = (pl.program_id(0) * Bt
+                   + jax.lax.broadcasted_iota(jnp.int32, (Bt, 1), 0))
 
-    def row_copies(slot, b, v):
-        """The DMA set staging vertex ``v``'s rows into buffer ``slot``."""
-        return [pltpu.make_async_copy(tab.at[v], buf.at[slot, b],
-                                      gsem.at[slot])
-                for tab, buf in zip(tabs, bufs)]
-
-    def gather(slot, action):
-        """Start/wait the row DMAs for every *alive* walker in the tile.
+    def gather(slot, lane0, action):
+        """Start/wait the row DMAs for every *alive* walker in lanes
+        ``[lane0, lane0 + Bc)`` (one cohort; the whole tile at K=1).
 
         ``pl.when`` on the SMEM alive flag is the PPR early-termination
         win: dead walkers stop gathering (and must skip the wait too —
-        the predicate is stable between the paired loops because
-        ``state_s`` is only rewritten after the next ``start``)."""
+        the predicate is stable between the paired loops because a
+        cohort's ``state_s`` lanes are only rewritten by its own phase,
+        after the previous ``wait`` and before the next ``start``)."""
         def body(b, _):
-            @pl.when(state_s[b, 1] != 0)
+            @pl.when(state_s[lane0 + b, 1] != 0)
             def _():
-                v = jnp.clip(state_s[b, 0], 0, num_verts - 1)
-                for dma in row_copies(slot, b, v):
+                v = jnp.clip(state_s[lane0 + b, 0], 0, num_verts - 1)
+                for tab, buf in zip(tabs, bufs):
+                    dma = pltpu.make_async_copy(tab.at[v], buf.at[slot, b],
+                                                gsem.at[slot])
                     getattr(dma, action)()
             return 0
-        jax.lax.fori_loop(0, Bt, body, 0)
+        jax.lax.fori_loop(0, Bc, body, 0)
 
-    def sync_state():
-        """Mirror (cur | alive) to SMEM — DMA indices must be scalars."""
-        cp = pltpu.make_async_copy(state_v, state_s, ssem)
+    def sync_state(lane0, n):
+        """Mirror lanes [lane0, lane0+n) of (cur | alive) to SMEM — DMA
+        indices must be scalars.  Cohort phases sync only their own
+        slice so they never perturb another cohort's DMA predicates."""
+        cp = pltpu.make_async_copy(state_v.at[pl.ds(lane0, n)],
+                                   state_s.at[pl.ds(lane0, n)], ssem)
         cp.start()
         cp.wait()
 
     # --- prologue: start vertex at col t0 (col 0 when not a segment),
     # everything else -1, stage the step-0 rows of the t0 == 0 walkers.
     starts = starts_ref[...]
-    colL = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
+    colL = jax.lax.broadcasted_iota(jnp.int32, (Bc, length + 1), 1)
     if segment:
         t0 = t0_ref[...]
         occupied = (starts >= 0) & (t0 <= length)
-        out_ref[...] = jnp.where((colL == t0) & occupied, starts, -1)
+        colT = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
+        out_ref[...] = jnp.where((colT == t0) & occupied, starts, -1)
         fr_ref[...] = jnp.full((Bt, 2), -1, jnp.int32)
         alive0 = occupied & (t0 == 0)
     else:
         t0 = jnp.zeros((Bt, 1), jnp.int32)
-        out_ref[...] = jnp.where(colL == 0, starts, -1)
+        colT = jax.lax.broadcasted_iota(jnp.int32, (Bt, length + 1), 1)
+        out_ref[...] = jnp.where(colT == 0, starts, -1)
         alive0 = jnp.ones((Bt, 1), jnp.bool_)
     state_v[:, 0:1] = jnp.maximum(starts, 0)
     state_v[:, 1:2] = alive0.astype(jnp.int32)
-    sync_state()
-    gather(0, "start")
+    sync_state(0, Bt)
+    if K == 1:
+        gather(0, 0, "start")
+    else:
+        for c in range(K):
+            gather(c, c * Bc, "start")
 
-    def step(t, _):
-        slot = jax.lax.rem(t, 2)
-        gather(slot, "wait")
-        cur = state_v[:, 0:1]
-        alive = state_v[:, 1:2] != 0
+    def phase(t, c, slot, next_slot):
+        """One cohort's step-t phase: wait its rows, sample in-register,
+        advance walker state, write path column t+1, and issue its
+        step-(t+1) gather into ``next_slot``.  At K >= 2 that gather is
+        in flight for the K-1 following phases (the other cohorts'
+        samples at step t) before cohort c waits on it — the ThunderRW
+        interleaving; at K=1 it only overlaps the loop epilogue."""
+        lane0 = c * Bc
+        sl = slice(lane0, lane0 + Bc)
+        gather(slot, lane0, "wait")
+        cur = state_v[sl, 0:1]
+        alive = state_v[sl, 1:2] != 0
+        wid = wid_ref[sl] if segment else wid_all[sl]        # (Bc, 1)
         if has_u:
-            u = u_ref[t]                                     # (Bt, 6)
+            u = u_ref[t][sl]                                 # (Bc, 6)
         else:
             u = uniforms_at(seed_ref[0], wid, t)
         if uniform:
@@ -225,36 +264,53 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
         emit = alive & (nxt >= 0)
         # column t+1 of the path tile via a lane-mask select — a dynamic
         # lane-dim store is the one construct Mosaic may refuse; the
-        # (Bt, L+1) read-modify-write is a single VPU pass over ~100 KB.
-        # Lanes only write columns inside their own [t0, L] window so a
-        # later-starting walker's prologue column survives.
-        wmask = (colL == t + 1) & (t0 <= t)
-        out_ref[...] = jnp.where(wmask, jnp.where(emit, nxt, -1),
-                                 out_ref[...])
+        # (Bc, L+1) read-modify-write is a single VPU pass over the
+        # cohort's rows.  Lanes only write columns inside their own
+        # [t0, L] window so a later-starting walker's prologue column
+        # survives.
+        t0c = t0[sl]
+        wmask = (colL == t + 1) & (t0c <= t)
+        out_ref[sl, :] = jnp.where(wmask, jnp.where(emit, nxt, -1),
+                                   out_ref[sl, :])
         if segment:
             remote = alive & (nxt <= -2)
-            fr_ref[...] = jnp.where(
+            fr_ref[sl, :] = jnp.where(
                 remote,
                 jnp.concatenate([-nxt - 2, jnp.full_like(nxt, t + 1)], -1),
-                fr_ref[...])
+                fr_ref[sl, :])
         new_alive = alive & ok & (nxt >= 0)
         cur2 = jnp.where(new_alive, nxt, cur)
         if segment:
             # wake the walkers whose segment window opens at step t+1
-            activate = (starts >= 0) & (t0 == t + 1) & (t + 1 < length)
-            cur2 = jnp.where(activate, starts, cur2)
+            startc = starts[sl]
+            activate = (startc >= 0) & (t0c == t + 1) & (t + 1 < length)
+            cur2 = jnp.where(activate, startc, cur2)
             new_alive = new_alive | activate
-        state_v[:, 0:1] = cur2
-        state_v[:, 1:2] = new_alive.astype(jnp.int32)
+        state_v[sl, 0:1] = cur2
+        state_v[sl, 1:2] = new_alive.astype(jnp.int32)
 
-        # kick off step t+1's gathers immediately — they overlap nothing
-        # upstream (the next vertex is data-dependent) but everything
-        # downstream: the loop epilogue, next wait setup, and (hash-PRNG
-        # mode) the next uniform draw all run under the in-flight DMAs.
+        # kick off this cohort's step-t+1 gathers immediately — they
+        # overlap nothing upstream (the next vertex is data-dependent)
+        # but everything downstream: at K=1 the loop epilogue, next
+        # wait setup, and (hash-PRNG mode) the next uniform draw; at
+        # K >= 2 additionally the other K-1 cohorts' full step-t
+        # samples, which is where the DMA latency actually hides.
         @pl.when(t + 1 < length)
         def _():
-            sync_state()
-            gather(jax.lax.rem(t + 1, 2), "start")
+            sync_state(lane0, Bc)
+            gather(next_slot, lane0, "start")
+
+    def step(t, _):
+        if K == 1:
+            # 2-slot ping-pong: the whole tile is one cohort, rows for
+            # step t in slot t%2 while slot (t+1)%2 receives the next.
+            phase(t, 0, jax.lax.rem(t, 2), jax.lax.rem(t + 1, 2))
+        else:
+            # rotated schedule: cohort c owns slot c outright — it is
+            # only rewritten (phase end) after its sample consumed it
+            # (phase start), so K slots of Bc rows replace 2 of Bt.
+            for c in range(K):
+                phase(t, c, c, c)
         return 0
 
     jax.lax.fori_loop(0, length, step, 0)
@@ -263,13 +319,13 @@ def _kernel(length, base_log2, stop_prob, uniform, has_frac, has_u,
 @functools.partial(
     jax.jit,
     static_argnames=("length", "base_log2", "stop_prob", "uniform",
-                     "segment", "block_b", "interpret"))
+                     "segment", "block_b", "interpret", "cohorts"))
 def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
                       u=None, t0=None, wid=None, *, length: int,
                       base_log2: int = 1,
                       stop_prob: float = 0.0, uniform: bool = False,
                       segment: bool = False, block_b: int = 256,
-                      interpret: bool = False):
+                      interpret: bool = False, cohorts: int = 1):
     """Whole-walk fused BINGO walk: one ``pallas_call`` for all L steps.
 
     ``prob``/``alias`` (V, Kin), ``bias``/``nbr`` (V, C) int32, ``deg``
@@ -296,7 +352,16 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     walks) is the start vertex, columns outside a walker's segment
     window and terminated walkers pad with -1 (the
     ``core/walks.py:random_walk`` contract).
+
+    ``cohorts=K`` (K ∈ {1, 2, 4, ...}) turns on cohort interleaving:
+    the per-tile batch is split into K cohorts whose gather DMAs and
+    sample compute are software-pipelined (module docstring).  The
+    output is **bit-identical for every K** — the PRNG keys by
+    (seed, wid, t) only, and every sample is lane-local — so ``ref``
+    oracles (which have no cohort notion) pin all values of K.
     """
+    if cohorts < 1:
+        raise ValueError(f"cohorts must be >= 1; got {cohorts}")
     if u is not None and u.shape[-1] < NUM_UNIFORMS:
         # Strict: the stop coin lives in column 5, and JAX's clamped
         # out-of-bounds gather would otherwise silently alias it onto
@@ -308,6 +373,13 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     has_frac = frac is not None and not uniform
     has_u = u is not None
     block_b = min(block_b, B)
+    # The tile must split evenly into cohorts; round up — ragged tails
+    # are already handled (Pallas pads out-of-bounds tile lanes; their
+    # gathers clip to vertex 0 and their output rows are discarded), so
+    # a ragged B simply rides the same padding at any K.
+    block_b = -(-block_b // cohorts) * cohorts
+    nslots = 2 if cohorts == 1 else cohorts
+    rows = block_b // (1 if cohorts == 1 else cohorts)
     grid = (pl.cdiv(B, block_b),)
     if segment and t0 is None:
         t0 = jnp.zeros((B,), jnp.int32)
@@ -331,20 +403,24 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
         args.append(u)
     any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
     deg2 = deg[:, None]
+    # Per-slot scratch rows: the K=1 ping-pong needs 2 full-tile slots;
+    # K >= 2 needs K cohort-sized slots — K·(Bt/K) = Bt rows total, a
+    # 2x shrink of gather scratch vs. the ping-pong (DESIGN.md §8).
     if uniform:
         tab_args = [nbr, deg2]
-        buf_shapes = [(2, block_b, C), (2, block_b, 1)]
+        buf_shapes = [(nslots, rows, C), (nslots, rows, 1)]
         buf_dtypes = [jnp.int32, jnp.int32]
     else:
         Kin = prob.shape[-1]
         tab_args = [prob, alias, bias, nbr, deg2]
-        buf_shapes = [(2, block_b, Kin), (2, block_b, Kin),
-                      (2, block_b, C), (2, block_b, C), (2, block_b, 1)]
+        buf_shapes = [(nslots, rows, Kin), (nslots, rows, Kin),
+                      (nslots, rows, C), (nslots, rows, C),
+                      (nslots, rows, 1)]
         buf_dtypes = [jnp.float32, jnp.int32, jnp.int32, jnp.int32,
                       jnp.int32]
         if has_frac:
             tab_args.append(frac)
-            buf_shapes.append((2, block_b, C))
+            buf_shapes.append((nslots, rows, C))
             buf_dtypes.append(jnp.float32)
     in_specs += [any_spec] * len(tab_args)
     args += tab_args
@@ -359,11 +435,12 @@ def walk_fused_pallas(prob, alias, bias, nbr, deg, frac, starts, seed,
     scratch += [
         pltpu.VMEM((block_b, 2), jnp.int32),        # state_v: cur | alive
         pltpu.SMEM((block_b, 2), jnp.int32),        # state_s: DMA indices
-        pltpu.SemaphoreType.DMA((2,)),              # row gathers, per slot
+        pltpu.SemaphoreType.DMA((nslots,)),         # row gathers, per slot
         pltpu.SemaphoreType.DMA(()),                # state mirror copy
     ]
     kern = functools.partial(_kernel, length, base_log2, float(stop_prob),
-                             uniform, has_frac, has_u, segment, block_b, V)
+                             uniform, has_frac, has_u, segment, block_b, V,
+                             cohorts)
     out = pl.pallas_call(
         kern,
         grid=grid,

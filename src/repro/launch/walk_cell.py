@@ -89,7 +89,10 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
     bcfg = BingoConfig(num_vertices=wcfg.num_vertices,
                        capacity=wcfg.capacity, bias_bits=wcfg.bias_bits,
                        adaptive=overrides.get("adaptive", True),
-                       backend=overrides.get("backend", "auto"))
+                       backend=overrides.get("backend", "auto"),
+                       # production default K=2: hides the row-gather DMA
+                       # behind the other cohort's sample (DESIGN.md §8)
+                       cohorts=overrides.get("cohorts", 2))
     state_sds = _state_sds(bcfg)
     sspecs = _state_specs(bcfg, mesh)
     chips = 1

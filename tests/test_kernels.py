@@ -419,6 +419,136 @@ def test_whole_walk_is_one_pallas_call():
 
 
 # ---------------------------------------------------------------------------
+# cohort interleaving (DESIGN.md §8): K ∈ {2, 4} must be bit-exact vs
+# K=1 and the jnp oracle — cohort geometry is a pure perf knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cohorts", [2, 4])
+@pytest.mark.parametrize("base_log2,fp,fed", [
+    (1, False, True),      # base-2 integer, fed uniforms
+    (2, False, True),      # base-4 digit acceptance
+    (1, True, False),      # fp decimal group, hash PRNG
+    (2, True, True),       # base-4 + fp
+])
+def test_walk_fused_cohorts_bitexact(cohorts, base_log2, fp, fed):
+    """Cohort-interleaved whole walk == K=1 kernel == oracle, fed AND
+    hash-PRNG modes, across bases/fp and a ragged batch (B=37 is not a
+    multiple of 2 or 4, so the last tile carries padded lanes in some
+    cohort).  The counter PRNG keys by (seed, wid, t) — never by
+    cohort, slot, or phase — so any K must reproduce the same walks."""
+    st, cfg = _fused_case(base_log2=base_log2, fp=fp)
+    B, L = 37, 9
+    starts = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    u = jax.random.uniform(jax.random.key(0), (L, B, 6)) if fed else None
+    seed = jnp.array([77], jnp.int32)
+    frac = st.frac if fp else None
+
+    def run(K):
+        return walk_fused_pallas(
+            st.itable.prob, st.itable.alias, st.bias, st.nbr, st.deg,
+            frac, starts, seed, u, length=L, base_log2=base_log2,
+            stop_prob=0.15, block_b=16, cohorts=K, interpret=True)
+
+    base = np.asarray(run(1))
+    np.testing.assert_array_equal(np.asarray(run(cohorts)), base)
+    path_r = ref.walk_fused_ref(st.itable.prob, st.itable.alias, st.bias,
+                                st.nbr, st.deg, frac, starts, u,
+                                base_log2=base_log2, stop_prob=0.15,
+                                seed=seed, length=L, cohorts=cohorts)
+    np.testing.assert_array_equal(base, np.asarray(path_r))
+
+
+@pytest.mark.parametrize("cohorts", [2, 4])
+def test_walk_fused_cohorts_dead_cohort(cohorts):
+    """All walkers of one cohort dead from step 1 (clustered dead-end
+    starts occupying exactly the first cohort's lanes): that cohort's
+    gathers go quiet (`pl.when` on its SMEM alive flags) while the
+    others keep walking — the masks are per-cohort, so a dead cohort
+    must not stall or corrupt the live ones."""
+    from repro.core.dyngraph import BingoConfig, from_edges
+    # vertex 0 is a dead end; 1..7 form a ring
+    src = np.array([1, 2, 3, 4, 5, 6, 7], np.int32)
+    dst = np.array([2, 3, 4, 5, 6, 7, 1], np.int32)
+    cfg = BingoConfig(num_vertices=8, capacity=2, bias_bits=2)
+    st = from_edges(cfg, src, dst, np.ones(7, np.int32))
+    B, L, bb = 16, 6, 16            # one tile; cohort 0 = lanes [0, B/K)
+    starts = jnp.asarray([0] * (B // cohorts)
+                         + [1 + i % 7 for i in range(B - B // cohorts)],
+                         jnp.int32)
+    seed = jnp.array([3], jnp.int32)
+
+    def run(K):
+        return walk_fused_pallas(st.itable.prob, st.itable.alias, st.bias,
+                                 st.nbr, st.deg, None, starts, seed, None,
+                                 length=L, block_b=bb, cohorts=K,
+                                 interpret=True)
+
+    base = np.asarray(run(1))
+    got = np.asarray(run(cohorts))
+    np.testing.assert_array_equal(got, base)
+    # dead cohort terminated at once; live walkers never did (ring)
+    assert (got[:B // cohorts, 1:] == -1).all()
+    assert (got[B // cohorts:] >= 0).all()
+
+
+@pytest.mark.parametrize("cohorts", [2, 4])
+@pytest.mark.parametrize("fed", [True, False])
+def test_walk_segment_cohorts_bitexact(cohorts, fed):
+    """Segment entry under cohort interleaving: remote-encoded
+    adjacency, random t0 windows, free slots — path AND frontier must
+    match K=1 and the windowed oracle in fed and hash-PRNG modes (the
+    relay's bit-equality depends on this)."""
+    st, cfg = _fused_case(base_log2=2, fp=True)
+    B, L = 29, 8
+    rng = np.random.default_rng(3)
+    starts = jnp.asarray(rng.integers(0, cfg.num_vertices, B), jnp.int32)
+    starts = jnp.where(jnp.asarray(rng.random(B) < 0.2), -1, starts)
+    t0 = jnp.asarray(rng.integers(0, L + 1, B), jnp.int32)
+    nbr = _remoteify(st.nbr)
+    u = jax.random.uniform(jax.random.key(4), (L, B, 6)) if fed else None
+    seed = jnp.array([99], jnp.int32)
+
+    def run(K):
+        return walk_fused_pallas(
+            st.itable.prob, st.itable.alias, st.bias, nbr, st.deg,
+            st.frac, starts, seed, u, t0, length=L, base_log2=2,
+            stop_prob=0.15, segment=True, block_b=16, cohorts=K,
+            interpret=True)
+
+    p1, f1 = (np.asarray(a) for a in run(1))
+    pk, fk = (np.asarray(a) for a in run(cohorts))
+    np.testing.assert_array_equal(pk, p1)
+    np.testing.assert_array_equal(fk, f1)
+    p_r, f_r = ref.walk_segment_ref(
+        st.itable.prob, st.itable.alias, st.bias, nbr, st.deg, st.frac,
+        starts, t0, u, length=L, base_log2=2, stop_prob=0.15, seed=seed,
+        cohorts=cohorts)
+    np.testing.assert_array_equal(pk, np.asarray(p_r))
+    np.testing.assert_array_equal(fk, np.asarray(f_r))
+
+
+@pytest.mark.parametrize("cohorts", [1, 2, 4])
+def test_whole_walk_is_one_pallas_call_any_cohorts(cohorts):
+    """The launch contract survives interleaving: an 80-step deepwalk
+    through the pallas backend is EXACTLY ONE pallas_call at every K —
+    the phase unroll lives inside the kernel's fori_loop body, not in
+    the surrounding jaxpr."""
+    import dataclasses
+    from repro.core import walks
+    from repro.core.backend import get_backend
+    st, cfg = _fused_case()
+    cfg = dataclasses.replace(cfg, cohorts=cohorts)
+    starts = jnp.zeros((8,), jnp.int32)
+    key = jax.random.key(0)
+    params = walks.WalkParams(kind="deepwalk", length=80)
+    fused = jax.make_jaxpr(
+        lambda s, k: get_backend("pallas").sample_walk(st, cfg, s, k,
+                                                       params))(starts, key)
+    assert _count_prims(fused, "pallas_call") == 1
+    assert _count_prims(fused, "pallas_call", inside_loops_only=True) == 0
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

@@ -101,6 +101,31 @@ def test_relay_hash_prng_matches_single_shard(num_shards):
 
 
 @pytest.mark.parametrize("num_shards", [1, pytest.param(8, marks=multi)])
+def test_relay_cohorts_bitexact(num_shards):
+    """Cohort interleaving reaches the relay's segment megakernel via
+    ``cfg.cohorts`` (carried through ``walk_relay``'s shard-local
+    ``dataclasses.replace``) — and changes nothing: the K=2 relay is
+    bit-identical to the K=1 relay AND to the single-shard whole walk,
+    because the counter PRNG keys by (seed, wid, t) only (DESIGN.md
+    §8/§10)."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(11)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    outs = {}
+    for K in (1, 2):
+        cfg_k = dataclasses.replace(cfg, cohorts=K)
+        paths, _, _ = _relay(st, cfg_k, params, walkers,
+                             seed_from_key(key), num_shards=num_shards)
+        outs[K] = np.asarray(paths)
+    np.testing.assert_array_equal(outs[2], outs[1])
+    np.testing.assert_array_equal(outs[2], np.asarray(single))
+
+
+@pytest.mark.parametrize("num_shards", [1, pytest.param(8, marks=multi)])
 def test_relay_reference_backend_matches_pallas(num_shards):
     """Both EngineBackends implement sample_walk_segment bit-exactly, so
     the relay result is backend-independent."""
