@@ -1,18 +1,98 @@
-"""Structural invariants of the BINGO sampling space (test oracle).
+"""Structural invariants of the BINGO sampling space.
 
-Checked with numpy for clarity; hypothesis property tests drive random
-update sequences through `updates.py` and assert these after every step.
+Two entry points (DESIGN.md §11):
+
+* ``check_state`` — the exhaustive numpy oracle.  Walks every rule the
+  sampling space depends on and returns a structured violation report
+  (list of ``Violation(vertex, digit, rule, detail)``); with
+  ``assert_ok=True`` (the default — the mode every hypothesis property
+  test drives) it raises ``AssertionError`` listing the violations
+  instead of dying on the first one.
+* ``check_state_device`` — the cheap jit-able subset: vectorized
+  per-rule *violating-vertex counts* over the row tables, callable from
+  the serving loop (``DynamicWalkEngine.audit``) without leaving the
+  device.  It covers the O(V·C) row/counter rules (``DEVICE_RULES``);
+  the group-membership and alias-encoding rules stay host-side — they
+  are O(V·C·K) set comparisons that only tests need.
 """
 
 from __future__ import annotations
 
+import functools
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dyngraph import DENSE, EMPTY, ONE, REGULAR, SPARSE, BingoConfig
+from repro.core.dyngraph import (DENSE, EMPTY, ONE, REGULAR, SPARSE,
+                                 BingoConfig, classify)
+
+__all__ = ["Violation", "check_state", "check_state_device", "DEVICE_RULES"]
 
 
-def check_state(state, cfg: BingoConfig, vertices=None) -> None:
-    """Raise AssertionError on any violated invariant."""
+class Violation(NamedTuple):
+    vertex: int       # offending vertex
+    digit: int        # radix-group index, -1 for row-level rules
+    rule: str         # rule id (see DEVICE_RULES + the host-only rules)
+    detail: str       # human-readable specifics
+
+
+# Rules covered by the device-side subset, in output order.
+DEVICE_RULES = ("deg_range", "live_nbr", "stale_tail", "bias_positive",
+                "digitsum", "gsize", "wdec", "gtype")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def check_state_device(state, cfg: BingoConfig) -> jax.Array:
+    """Per-rule violating-vertex counts, ``(len(DEVICE_RULES),)`` int32.
+
+    All-zero means the row tables and per-vertex counters are mutually
+    consistent.  One fused pass over the ``(V, C)`` tables — cheap
+    enough for a serving loop to call between rounds.
+    """
+    V, C = state.nbr.shape
+    K = cfg.num_radix
+    r, B = cfg.base_log2, cfg.base
+    deg = state.deg
+    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    live = col < deg[:, None]                               # (V, C)
+
+    bad_deg = (deg < 0) | (deg > C)
+    bad_live = jnp.any(live & (state.nbr < 0), axis=-1)
+    bad_tail = jnp.any(~live & (state.nbr != -1), axis=-1)
+    if cfg.fp_bias:
+        bad_bias = jnp.any(live & (state.bias + state.frac <= 0), axis=-1)
+    else:
+        bad_bias = jnp.any(live & (state.bias < 1), axis=-1)
+
+    ks = jnp.arange(K, dtype=jnp.int32)
+    digs = jnp.where(live[..., None],
+                     (state.bias[..., None] >> (r * ks)) & (B - 1), 0)
+    bad_dsum = jnp.any(state.digitsum != jnp.sum(digs, axis=1), axis=-1)
+    bad_gsz = jnp.any(
+        state.gsize != jnp.sum((digs != 0).astype(jnp.int32), axis=1),
+        axis=-1)
+    bad_wdec = jnp.abs(
+        state.wdec - jnp.sum(jnp.where(live, state.frac, 0.0), axis=-1)
+    ) > 1e-4
+    bad_type = jnp.any(
+        state.gtype != classify(state.gsize, deg, cfg), axis=-1)
+
+    counts = [bad_deg, bad_live, bad_tail, bad_bias,
+              bad_dsum, bad_gsz, bad_wdec, bad_type]
+    return jnp.stack([jnp.sum(b, dtype=jnp.int32) for b in counts])
+
+
+def check_state(state, cfg: BingoConfig, vertices=None, *,
+                assert_ok: bool = True) -> List[Violation]:
+    """Exhaustive host-side audit; returns the full violation report.
+
+    ``assert_ok=True`` raises ``AssertionError`` (listing up to the
+    first 20 violations) when the report is non-empty — the contract
+    the property tests rely on.  ``assert_ok=False`` always returns,
+    letting serving code triage a corrupted state without dying.
+    """
     nbr = np.asarray(state.nbr)
     bias = np.asarray(state.bias)
     frac = np.asarray(state.frac)
@@ -29,58 +109,86 @@ def check_state(state, cfg: BingoConfig, vertices=None) -> None:
     B = cfg.base
     r = cfg.base_log2
     verts = range(V) if vertices is None else vertices
+    out: List[Violation] = []
+
+    def bad(u, k, rule, detail):
+        out.append(Violation(int(u), int(k), rule, detail))
 
     for u in verts:
         d = int(deg[u])
-        assert 0 <= d <= C, f"deg out of range at {u}"
-        assert (nbr[u, :d] >= 0).all(), f"invalid neighbor in live slots of {u}"
-        assert (nbr[u, d:] == -1).all(), f"stale neighbor past deg of {u}"
+        if not 0 <= d <= C:
+            bad(u, -1, "deg_range", f"deg={d} outside [0, {C}]")
+            continue  # the row rules below index with d
+        if not (nbr[u, :d] >= 0).all():
+            bad(u, -1, "live_nbr", f"negative neighbor in live slots: "
+                f"{nbr[u, :d].tolist()}")
+        if not (nbr[u, d:] == -1).all():
+            bad(u, -1, "stale_tail", "neighbor past deg not -1")
         if not cfg.fp_bias:
-            assert (bias[u, :d] >= 1).all(), f"zero bias in live slot of {u}"
+            if not (bias[u, :d] >= 1).all():
+                bad(u, -1, "bias_positive", "zero/negative int bias in "
+                    "live slot")
         else:
-            assert (bias[u, :d] + frac[u, :d] > 0).all(), f"empty fp bias at {u}"
+            if not (bias[u, :d] + frac[u, :d] > 0).all():
+                bad(u, -1, "bias_positive", "non-positive fp bias in "
+                    "live slot")
         # counters match the adjacency row exactly
         digs = (bias[u, :d, None] >> (r * np.arange(K))) & (B - 1)  # (d, K)
-        assert (digitsum[u] == digs.sum(0)).all(), f"digitsum mismatch at {u}"
-        assert (gsize[u] == (digs != 0).sum(0)).all(), f"gsize mismatch at {u}"
-        np.testing.assert_allclose(
-            wdec[u], frac[u, :d].sum(), atol=1e-4,
-            err_msg=f"wdec mismatch at {u}")
+        if not (digitsum[u] == digs.sum(0)).all():
+            bad(u, -1, "digitsum",
+                f"{digitsum[u].tolist()} vs recomputed {digs.sum(0).tolist()}")
+        if not (gsize[u] == (digs != 0).sum(0)).all():
+            bad(u, -1, "gsize",
+                f"{gsize[u].tolist()} vs recomputed "
+                f"{(digs != 0).sum(0).tolist()}")
+        if not np.isclose(wdec[u], frac[u, :d].sum(), atol=1e-4):
+            bad(u, -1, "wdec", f"{wdec[u]} vs recomputed {frac[u, :d].sum()}")
 
         for k in range(K):
             sz = int(gsize[u, k])
             expected = set(np.nonzero(digs[:, k] != 0)[0].tolist())
             t = int(gtype[u, k])
             if sz == 0:
-                assert t == EMPTY, f"type of empty group ({u},{k})"
+                if t != EMPTY:
+                    bad(u, k, "gtype", f"empty group typed {t}")
                 continue
             if cfg.adaptive:
                 if sz > cfg.alpha * d:
-                    assert t == DENSE, f"dense misclass ({u},{k})"
+                    want = DENSE
                 elif sz == 1:
-                    assert t == ONE, f"one misclass ({u},{k})"
+                    want = ONE
                 elif sz < cfg.beta * d:
-                    assert t == SPARSE, f"sparse misclass ({u},{k})"
+                    want = SPARSE
                 else:
-                    assert t == REGULAR, f"regular misclass ({u},{k})"
+                    want = REGULAR
             else:
-                assert t == REGULAR, f"baseline type ({u},{k})"
+                want = REGULAR
+            if t != want:
+                bad(u, k, "gtype", f"classified {t}, expected {want} "
+                    f"(gsize={sz}, deg={d})")
             if t == DENSE:
                 continue  # unmaterialized — nothing else to check
             # materialized: gmem prefix lists exactly the member slots
             got = gmem[u, k, :sz]
-            assert (got >= 0).all(), f"hole in group row ({u},{k})"
-            assert len(set(got.tolist())) == sz, f"dup in group row ({u},{k})"
-            assert set(got.tolist()) == expected, \
-                f"membership mismatch ({u},{k}): {sorted(got)} vs {sorted(expected)}"
-            assert (gmem[u, k, sz:] == -1).all(), f"stale tail ({u},{k})"
+            if not (got >= 0).all():
+                bad(u, k, "gmem_hole", f"hole in group row: {got.tolist()}")
+                continue
+            if len(set(got.tolist())) != sz:
+                bad(u, k, "gmem_dup", f"duplicate slot in group row: "
+                    f"{sorted(got.tolist())}")
+            if set(got.tolist()) != expected:
+                bad(u, k, "gmem_membership",
+                    f"{sorted(got.tolist())} vs expected {sorted(expected)}")
+            if not (gmem[u, k, sz:] == -1).all():
+                bad(u, k, "gmem_stale_tail", "group row past gsize not -1")
             if ginv is not None:
                 for p_, s_ in enumerate(got):
-                    assert ginv[u, k, s_] == p_, \
-                        f"inverted index broken ({u},{k},{s_})"
+                    if ginv[u, k, s_] != p_:
+                        bad(u, k, "ginv", f"ginv[{s_}]={ginv[u, k, s_]}, "
+                            f"expected {p_}")
                 dead = np.setdiff1d(np.arange(C), got)
-                assert (ginv[u, k, dead] == -1).all(), \
-                    f"stale inverted entries ({u},{k})"
+                if not (ginv[u, k, dead] == -1).all():
+                    bad(u, k, "ginv_stale", "stale inverted entries")
 
         # inter-group alias row encodes the exact group weights (Thm 4.1
         # stage-(i) marginal)
@@ -95,7 +203,16 @@ def check_state(state, cfg: BingoConfig, vertices=None) -> None:
             enc[al[i]] += 1.0 - prob[i]
         enc /= n
         tot = wts.sum()
-        if tot > 0:
-            np.testing.assert_allclose(
-                enc, wts / tot, atol=2e-4,
-                err_msg=f"alias row does not encode group weights at {u}")
+        if tot > 0 and not np.allclose(enc, wts / tot, atol=2e-4):
+            bad(u, -1, "alias_encoding",
+                f"alias row encodes {enc.tolist()}, group weights "
+                f"{(wts / tot).tolist()}")
+
+    if assert_ok and out:
+        head = "\n  ".join(
+            f"v{vi.vertex} g{vi.digit} [{vi.rule}] {vi.detail}"
+            for vi in out[:20])
+        more = "" if len(out) <= 20 else f"\n  ... and {len(out) - 20} more"
+        raise AssertionError(
+            f"{len(out)} invariant violation(s):\n  {head}{more}")
+    return out

@@ -47,13 +47,30 @@ from repro.core.dyngraph import (DENSE, EMPTY, BingoConfig, BingoState,
                                  classify, refresh_vertices)
 
 __all__ = ["insert_edge", "delete_edge", "stream_updates", "batched_update",
-           "UpdateStats", "two_phase_delete", "make_updater"]
+           "UpdateStats", "two_phase_delete", "make_updater",
+           "R_OK", "R_VERTEX", "R_DUP", "R_ABSENT", "R_CAPACITY", "R_WEIGHT",
+           "NUM_REASONS", "REASON_NAMES"]
+
+# Reject-reason taxonomy (DESIGN.md §11).  The engine-level pipelines below
+# classify and count R_VERTEX / R_CAPACITY / R_ABSENT themselves; R_DUP and
+# R_WEIGHT are policy decisions owned by the serving guard
+# (``serve/guard.py``), which reuses these codes so quarantine records and
+# ``UpdateStats.rejected`` speak one language.
+R_OK = 0          # applied
+R_VERTEX = 1      # endpoint out of range: u outside [0, V) or v < 0
+R_DUP = 2         # duplicate insert of a live edge (guard policy)
+R_ABSENT = 3      # delete of an edge that is not present
+R_CAPACITY = 4    # insert into a full adjacency row (deg == C)
+R_WEIGHT = 5      # non-finite / non-positive bias (guard / stream layer)
+NUM_REASONS = 6
+REASON_NAMES = ("ok", "vertex", "dup", "absent", "capacity", "weight")
 
 
 class UpdateStats(NamedTuple):
     ins_applied: jax.Array    # () int32
     del_applied: jax.Array    # () int32
     transitions: jax.Array    # (5, 5) int32 group-type transition counts
+    rejected: jax.Array       # (NUM_REASONS,) int32 per-reason reject counts
 
 
 def _locate(state: BingoState, cfg: BingoConfig, u, slot):
@@ -100,16 +117,26 @@ def insert_edge(state: BingoState, cfg: BingoConfig, u, v, w,
 
     O(K) group appends + O(K) alias rebuild; a full-row rebuild fires only
     on a DENSE -> materialized type transition (rare, Table 4).
+
+    ``ok`` is False (and the state untouched) for a full row *or* an
+    out-of-range endpoint — u outside [0, V), v < 0.  v's upper bound is
+    deliberately unchecked here: sharded callers store GLOBAL neighbor ids
+    against a local ``cfg.num_vertices`` (DESIGN.md §10); the serving guard
+    checks v < V against the global config.
     """
     K, C, Cg = cfg.num_radix, cfg.capacity, cfg.group_capacity
+    V = cfg.num_vertices
     u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
     if cfg.fp_bias:
         w_int, w_frac = radix.decompose_fp(w, cfg.lam)
     else:
         w_int = jnp.asarray(w, jnp.int32)
         w_frac = jnp.float32(0.0)
 
-    ok = state.deg[u] < C
+    valid = (u >= 0) & (u < V) & (v >= 0)
+    u = jnp.where(valid, u, 0)          # clamp so even gathers cannot wrap
+    ok = valid & (state.deg[u] < C)
     slot = state.deg[u]
     slot_idx = jnp.where(ok, slot, C)                     # OOB -> dropped
     nbr = state.nbr.at[u, slot_idx].set(v, mode="drop")
@@ -153,13 +180,19 @@ def delete_edge(state: BingoState, cfg: BingoConfig, u, v,
     inverted index / row scan, delete-and-swap in each group, swap-with-tail
     on the adjacency row (relabeling group references of the moved slot),
     rebuild the inter-group alias row.
+
+    ``ok`` is False for an absent edge *or* an out-of-range u (negative u
+    would otherwise wrap into another vertex's row).
     """
     K, C, Cg = cfg.num_radix, cfg.capacity, cfg.group_capacity
+    V = cfg.num_vertices
     u = jnp.asarray(u, jnp.int32)
+    valid_u = (u >= 0) & (u < V)
+    u = jnp.where(valid_u, u, 0)
     ks = jnp.arange(K, dtype=jnp.int32)
     valid = jnp.arange(C, dtype=jnp.int32) < state.deg[u]
     matches = (state.nbr[u] == v) & valid
-    ok = jnp.any(matches)
+    ok = jnp.any(matches) & valid_u
     slot = jnp.argmax(matches).astype(jnp.int32)          # earliest version
     last = state.deg[u] - 1
 
@@ -297,6 +330,15 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     Stages: CPU-side ordering becomes an on-device sort; then per vertex —
     insert, delete (two-phase delete-and-swap), and a single rebuild of the
     group structures + inter-group alias tables of affected vertices.
+
+    Robustness contract (DESIGN.md §11): no lane can corrupt the table.
+    Out-of-range endpoints (u outside [0, V), v < 0 — a negative u would
+    otherwise *wrap* in the scatters and write another vertex's row),
+    inserts into a full row, and deletes of absent edges are all dropped
+    and counted per-reason in ``UpdateStats.rejected``.  v's upper bound is
+    deliberately unchecked: sharded callers store GLOBAL neighbor ids
+    against a local ``cfg.num_vertices`` (DESIGN.md §10); the serving
+    guard (``serve/guard.py``) checks v < V against the global config.
     """
     V, C = cfg.num_vertices, cfg.capacity
     B = u.shape[0]
@@ -304,8 +346,9 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     v = jnp.asarray(v, jnp.int32)
     if active is None:
         active = jnp.ones((B,), bool)
-    ins = is_insert & active
-    dele = (~is_insert) & active
+    lane_ok = (u >= 0) & (u < V) & (v >= 0)
+    ins = is_insert & active & lane_ok
+    dele = (~is_insert) & active & lane_ok
     if cfg.fp_bias:
         w_int, w_frac = radix.decompose_fp(w, cfg.lam)
     else:
@@ -351,7 +394,7 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     n_del = jnp.sum(okD, dtype=jnp.int32)
 
     # affected vertices (inserts ∪ deletes), padded with sentinel V
-    U = _padded_unique(jnp.where(active, u, V), V)         # (B,)
+    U = _padded_unique(jnp.where(ins | dele, u, V), V)     # (B,)
     rowid = jnp.searchsorted(U, du_s)                      # delete -> row in U
     rowid = jnp.where(okD, rowid, B)
     del_mask = jnp.zeros((B, C), bool).at[rowid, slotD].set(True, mode="drop")
@@ -379,10 +422,16 @@ def batched_update(state: BingoState, cfg: BingoConfig, is_insert, u, v, w,
     changed = (old_gtype != new_gtype) & valid_row
     trans = jnp.zeros((25,), jnp.int32).at[
         jnp.where(changed, pair, 25)].add(1, mode="drop").reshape(5, 5)
-    return st, UpdateStats(n_ins, n_del, trans)
+    rejected = (
+        jnp.zeros((NUM_REASONS,), jnp.int32)
+        .at[R_VERTEX].set(jnp.sum(active & ~lane_ok, dtype=jnp.int32))
+        .at[R_CAPACITY].set(jnp.sum(ins, dtype=jnp.int32) - n_ins)
+        .at[R_ABSENT].set(jnp.sum(dele, dtype=jnp.int32) - n_del))
+    return st, UpdateStats(n_ins, n_del, trans, rejected)
 
 
-def make_updater(cfg: BingoConfig, backend: Optional[str] = None):
+def make_updater(cfg: BingoConfig, backend: Optional[str] = None,
+                 with_active: bool = False):
     """Jitted batched-update closure (cfg/backend static), donated state.
 
     Mirrors ``core/walks.py:make_walker``: returns ``run(st, is_insert,
@@ -394,11 +443,22 @@ def make_updater(cfg: BingoConfig, backend: Optional[str] = None):
     is applied through the ``EngineBackend`` named by ``backend``
     (default ``cfg.backend``): the jnp pipeline on the reference
     backend, one update-megakernel launch on pallas.
+
+    With ``with_active=True`` the closure takes a sixth ``active (B,)``
+    bool argument — the serving guard (``serve/guard.py``) uses it to
+    apply only the lanes its device-side pre-pass accepted while keeping
+    the round's shape (and hence the compiled program) fixed.
     """
     from repro.core.backend import get_backend
     bk = get_backend(cfg.backend if backend is None else backend)
 
-    @functools.partial(jax.jit, donate_argnums=0)
-    def run(st, is_insert, u, v, w):
-        return bk.apply_updates(st, cfg, is_insert, u, v, w)
+    if with_active:
+        @functools.partial(jax.jit, donate_argnums=0)
+        def run(st, is_insert, u, v, w, active):
+            return bk.apply_updates(st, cfg, is_insert, u, v, w,
+                                    active=active)
+    else:
+        @functools.partial(jax.jit, donate_argnums=0)
+        def run(st, is_insert, u, v, w):
+            return bk.apply_updates(st, cfg, is_insert, u, v, w)
     return run

@@ -1,11 +1,16 @@
 """Distribution substrate: sharding rules, collectives, compression,
-walker routing (mailbox all_to_all) and the super-step walker relay
-(exact cross-shard whole walks, DESIGN.md §10)."""
+walker routing (mailbox all_to_all), the super-step walker relay
+(exact cross-shard whole walks, DESIGN.md §10) and its seeded
+fault-injection harness (DESIGN.md §11)."""
 
+from repro.distributed.chaos import (ChaosReport, ChaosSchedule,
+                                     RelayIntegrityError, run_chaos_relay)
 from repro.distributed.relay import relay_local, relay_view
 from repro.distributed.sharding import (batch_pspec, cache_pspecs,
                                         fsdp_axes, param_pspecs)
 from repro.distributed.walker_exchange import exchange_walkers
 
 __all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "fsdp_axes",
-           "exchange_walkers", "relay_local", "relay_view"]
+           "exchange_walkers", "relay_local", "relay_view",
+           "ChaosReport", "ChaosSchedule", "RelayIntegrityError",
+           "run_chaos_relay"]

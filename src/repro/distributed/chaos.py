@@ -1,0 +1,279 @@
+"""Seeded fault injection for the walker relay (DESIGN.md §11).
+
+The relay's conservation claim — no walker is ever silently dropped,
+mailbox overflow is re-enqueued, paths stitch bit-identically at any
+shard count — is only trustworthy if it survives a hostile transport.
+This module is the harness that makes the claim falsifiable: a
+``ChaosSchedule`` seeds a deterministic fault stream over the mailbox
+all_to_all (``relay_local``'s ``exchange_fn`` hook) that can
+
+  * **drop** payload rows (a lost RPC — unrecoverable, the relay must
+    *detect* it, not paper over it),
+  * **duplicate** rows into free payload slots (an at-least-once
+    transport; recoverable because the per-walker PRNG is the counter
+    hash ``uniforms_at(seed, wid, t)`` — both copies walk the same
+    path and the home-block scatter is a ``max`` of equal values),
+  * **delay** rows by a round (re-queued through the sender's leftover
+    buffer — recoverable, the relay already retries leftovers),
+  * **cap-starve** the mailboxes (``mailbox_cap=1`` squeezes every
+    record through one-row mailboxes — recoverable, just more rounds),
+  * **kill** the transport from a given round on (``kill_round`` — a
+    mid-stream shard death; nothing is delivered again, the relay runs
+    into ``max_rounds`` with work outstanding).
+
+Faults are a pure hash of ``(schedule seed, round, channel, shard,
+row)`` — the same schedule replays the same faults, so every assertion
+in ``tests/test_chaos.py`` is deterministic.
+
+``run_chaos_relay`` runs the relay with the census outputs on and
+enforces the contract: every live walker finishes (a DISTINCT-wid
+count, so duplicates cannot mask a drop), nothing is pending at exit,
+and the stitched paths are structurally sound (``audit_paths``).  Any
+violation raises ``RelayIntegrityError`` carrying a ``ChaosReport`` —
+the relay recovers exactly or fails loudly, never silently truncates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.relay import make_relay, shard_index
+from repro.distributed.walker_exchange import (exchange_walkers,
+                                               merge_into_free)
+
+__all__ = ["ChaosSchedule", "ChaosReport", "RelayIntegrityError",
+           "audit_paths", "make_chaos_relay", "run_chaos_relay"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """One seeded fault configuration for the relay transport.
+
+    ``drop``/``dup``/``delay`` are per-row fault probabilities applied
+    with that precedence (a row suffers at most one fault per round).
+    ``path_faults=False`` restricts faults to the walker channel;
+    ``True`` faults the path-record channel too.  ``mailbox_cap``
+    starves the mailboxes (None = the relay default).  ``kill_round >=
+    0`` stalls the transport permanently from that round.  Rates near
+    1.0 with heavy duplication can exceed the relay's (W,) queue bounds
+    — the harness is meant for sparse fault streams, not saturation.
+    """
+    seed: int = 0
+    drop: float = 0.0
+    dup: float = 0.0
+    delay: float = 0.0
+    path_faults: bool = False
+    mailbox_cap: Optional[int] = None
+    kill_round: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosReport:
+    """Census of one chaos run — attached to ``RelayIntegrityError``."""
+    walkers: int            # live walkers submitted (starts >= 0)
+    finished: int           # DISTINCT wids that reached a terminal step
+    lost: int               # walkers - finished
+    rounds: int             # relay rounds executed
+    pending_at_exit: int    # > 0 iff the relay gave up against max_rounds
+    overflow: int           # mailbox-overflow re-enqueues observed
+    dropped: int            # injected drops (incl. unplaceable delays)
+    duplicated: int         # injected duplicate rows
+    delayed: int            # injected one-round delays
+    peak_slots: int         # peak per-shard slot occupancy
+
+
+class RelayIntegrityError(RuntimeError):
+    """The relay lost work (or produced malformed paths) under faults.
+
+    Carries the full ``ChaosReport`` as ``.report`` and the path-audit
+    findings as ``.problems`` — the structured diagnostic DESIGN.md §11
+    demands in place of silent truncation.
+    """
+
+    def __init__(self, report: ChaosReport,
+                 problems: Sequence[str] = ()):
+        self.report = report
+        self.problems = list(problems)
+        bits = [f"{report.lost} of {report.walkers} walker(s) lost"]
+        if report.pending_at_exit:
+            bits.append(f"{report.pending_at_exit} pending at exit "
+                        f"after {report.rounds} rounds")
+        if self.problems:
+            bits.append(f"{len(self.problems)} malformed path row(s): "
+                        + "; ".join(self.problems[:5]))
+        super().__init__("relay integrity violated: " + ", ".join(bits)
+                         + f" [{report}]")
+
+
+def _u01(x):
+    """fmix32-style avalanche of int32 lanes -> uniforms in [0, 1)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def _make_chaos_exchange(sched: ChaosSchedule, shard_size: int,
+                         num_shards: int, mesh):
+    """Build the faulty ``exchange_fn`` closure for ``relay_local``."""
+    axes = tuple(mesh.axis_names)
+
+    def exchange(payload, *, cap, r, channel):
+        live = payload[:, 0] >= 0
+        n = payload.shape[0]
+        if channel == 1 and not sched.path_faults:
+            drop = dup = delay = 0.0
+        else:
+            drop, dup, delay = sched.drop, sched.dup, sched.delay
+
+        idx = jnp.arange(n, dtype=jnp.int32)
+        sidx = shard_index(mesh)
+        u = _u01(idx * jnp.int32(40503) + r * jnp.int32(69069)
+                 + jnp.int32(channel * 97) + sidx * jnp.int32(131071)
+                 + jnp.int32(sched.seed))
+        dropped = live & (u < drop)
+        duped = live & ~dropped & (u < drop + dup)
+        delayed = live & ~dropped & ~duped & (u < drop + dup + delay)
+
+        # inject: blank dropped/delayed rows, copy duplicates into free
+        # payload rows (an at-least-once transport), then run the real
+        # exchange on the mutated payload.
+        send = jnp.where((dropped | delayed)[:, None],
+                         jnp.int32(-1), payload)
+        send, n_dup = merge_into_free(send, payload, duped)
+        arrived, leftover, ovf = exchange_walkers(
+            send, shard_size, num_shards, axes, cap=cap)
+
+        # delayed rows re-enter through the sender's leftover buffer —
+        # the relay re-enqueues leftovers next round, so a delay is
+        # conservation-exact.  A delayed row the buffer cannot hold is
+        # counted as a forced drop (never silently vanishes).
+        leftover, n_requeued = merge_into_free(leftover, payload, delayed)
+        n_drop = (dropped.sum(dtype=jnp.int32)
+                  + delayed.sum(dtype=jnp.int32) - n_requeued)
+        faults = jnp.stack([n_drop, n_dup, n_requeued])
+
+        # kill: from kill_round on the transport is dead — nothing
+        # arrives, everything stays on the sender.  The relay stalls
+        # and exits against max_rounds with pending work, which the
+        # census surfaces as pending_at_exit > 0.
+        killed = jnp.asarray(sched.kill_round >= 0) \
+            & (r >= sched.kill_round)
+        arrived = jnp.where(killed, jnp.int32(-1), arrived)
+        leftover = jnp.where(killed, payload, leftover)
+        ovf = jnp.where(killed, live.sum(dtype=jnp.int32), ovf)
+        faults = jnp.where(killed, jnp.zeros((3,), jnp.int32), faults)
+        return arrived, leftover, ovf, faults
+
+    return exchange
+
+
+def make_chaos_relay(bk, cfg, params, mesh, sched: ChaosSchedule, *,
+                     max_rounds: Optional[int] = None,
+                     slot_slack: Optional[int] = None,
+                     path_cap: Optional[int] = None):
+    """``make_relay`` with the chaotic transport and the census on.
+
+    Returns ``run(state, walkers, seed, u=None) -> (paths, rounds,
+    overflow, peak_slots, finished, pending_at_exit, faults (3,))``.
+    Pass a small explicit ``max_rounds`` for kill-round schedules — the
+    conservative default bound makes a dead transport take a long time
+    to give up.
+    """
+    ex = _make_chaos_exchange(
+        sched, _shard_size(cfg, mesh), _num_shards(mesh), mesh)
+    return make_relay(bk, cfg, params, mesh,
+                      mailbox_cap=sched.mailbox_cap,
+                      max_rounds=max_rounds, slot_slack=slot_slack,
+                      path_cap=path_cap, diagnostics=True,
+                      exchange_fn=ex, census=True)
+
+
+def _num_shards(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _shard_size(cfg, mesh) -> int:
+    return cfg.num_vertices // _num_shards(mesh)
+
+
+def audit_paths(paths, starts, *, full_length: bool = False) -> List[str]:
+    """Host-side structural audit of stitched relay paths.
+
+    Checks, per walker: column 0 equals the start vertex; no valid
+    column after the first -1 (a hole is a lost path segment); and —
+    with ``full_length=True``, for graphs where every walk must run the
+    whole length (all degrees > 0, stop_prob == 0) — no early
+    truncation.  Returns a list of human-readable findings (empty =
+    sound).
+    """
+    paths = np.asarray(paths)
+    starts = np.asarray(starts)
+    problems: List[str] = []
+    W, Lp1 = paths.shape
+    for wid in range(W):
+        row = paths[wid]
+        if starts[wid] < 0:
+            if (row >= 0).any():
+                problems.append(f"walker {wid}: free slot has path data")
+            continue
+        if row[0] != starts[wid]:
+            problems.append(f"walker {wid}: starts at {int(row[0])}, "
+                            f"expected {int(starts[wid])}")
+        valid = row >= 0
+        if (~valid).any():
+            gap = int(np.argmax(~valid))
+            if valid[gap:].any():
+                problems.append(f"walker {wid}: hole at column {gap}")
+            elif full_length:
+                problems.append(f"walker {wid}: truncated at column "
+                                f"{gap}/{Lp1 - 1}")
+    return problems
+
+
+def run_chaos_relay(bk, cfg, params, mesh, state, walkers, seed,
+                    sched: ChaosSchedule, *,
+                    max_rounds: Optional[int] = None,
+                    slot_slack: Optional[int] = None,
+                    path_cap: Optional[int] = None,
+                    full_length: bool = False):
+    """Run one chaos schedule and enforce the conservation contract.
+
+    Returns ``(paths (W, L+1), ChaosReport)`` when every live walker
+    finished, nothing was pending at exit, and the paths pass the
+    structural audit; raises ``RelayIntegrityError`` (report attached)
+    otherwise.  Recoverable schedules (dup / delay / cap-starve) must
+    additionally produce paths bit-identical to the fault-free relay —
+    that pin lives in ``tests/test_chaos.py``.
+    """
+    relay = make_chaos_relay(bk, cfg, params, mesh, sched,
+                             max_rounds=max_rounds, slot_slack=slot_slack,
+                             path_cap=path_cap)
+    paths, rounds, ovf, peak, finished, pending, faults = relay(
+        state, walkers, seed)
+    starts = np.asarray(walkers)
+    n_live = int((starts >= 0).sum())
+    f = np.asarray(faults)
+    report = ChaosReport(
+        walkers=n_live, finished=int(finished),
+        lost=n_live - int(finished), rounds=int(rounds),
+        pending_at_exit=int(pending), overflow=int(ovf),
+        dropped=int(f[0]), duplicated=int(f[1]), delayed=int(f[2]),
+        peak_slots=int(peak))
+    problems = audit_paths(paths, starts, full_length=full_length) \
+        if report.lost == 0 and report.pending_at_exit == 0 else []
+    if report.lost or report.pending_at_exit or problems:
+        raise RelayIntegrityError(report, problems)
+    return paths, report

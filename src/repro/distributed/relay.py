@@ -113,9 +113,33 @@ def _compact_rows(rows, limit: int):
 
     Callers only pass row sets whose valid count is <= ``limit`` by
     construction (each row is a distinct walker and there are at most W
-    walkers anywhere), so the truncation never drops a valid row."""
+    walkers anywhere — walker pools are deduped by wid first), so the
+    truncation never drops a valid row."""
     order = jnp.argsort(rows[:, 0] < 0)         # stable: valid first
     return rows[order][:limit]
+
+
+def _dedup_wid(rows, col: int = 2):
+    """Blank all but one copy of each walker id in a record pool.
+
+    Idempotent arrival handling (DESIGN.md §11): an at-least-once
+    transport may deliver the same walker record twice (the chaos
+    harness injects exactly that).  Any two in-flight records carrying
+    the same wid are stages of the *same* deterministic walk — the
+    (seed, wid, t) hash PRNG fixes the path — so keeping one arbitrary
+    copy is lossless, and without dedup duplicate copies would breed
+    through re-exchange until they overrun the (W,)-row pool bounds.
+    Production streams never duplicate, making this a pure no-op there.
+    """
+    wid = rows[:, col]
+    big = jnp.int32(2 ** 30)
+    key = jnp.where(wid >= 0, wid, big)
+    order = jnp.argsort(key)                    # stable
+    srt = key[order]
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((1,), bool), (srt[1:] == srt[:-1]) & (srt[1:] < big)])
+    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    return jnp.where(dup[:, None], -1, rows)
 
 
 def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
@@ -124,7 +148,8 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
                 max_rounds: int | None = None,
                 slot_slack: int | None = None,
                 path_cap: int | None = None,
-                diagnostics: bool = False):
+                diagnostics: bool = False,
+                exchange_fn=None, census: bool = False):
     """Per-shard body of the super-step relay (call inside shard_map).
 
     ``bk``/``lcfg``/``params`` — an ``EngineBackend`` with
@@ -158,6 +183,20 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     replicated scalar is appended: the peak number of slots in use on
     any shard in any round (resident walkers + pinned path rows) —
     the allocator-pressure signal benchmarks record.
+
+    Fault-injection hooks (DESIGN.md §11 — ``distributed/chaos.py``):
+    ``exchange_fn(payload, cap=, r=, channel=)`` replaces the mailbox
+    all_to_all (channel 0 = walker records, 1 = path records) and must
+    return ``(arrived, leftover, overflow, faults (3,) int32)`` — the
+    extra vector counts injected drop/dup/delay events and is
+    accumulated across rounds.  ``census=True`` appends three outputs
+    after the optional peak: the number of DISTINCT walker ids that
+    reached a terminal step anywhere (a per-shard wid bitmap, psum'd
+    once at exit — duplicates from chaos cannot mask a dropped walker),
+    the pending count at loop exit (> 0 means the relay gave up with
+    work outstanding — only possible against ``max_rounds``), and the
+    psum'd fault counts.  Both default off; the production path is
+    unchanged.
     """
     W = walkers.shape[0]
     L = params.length
@@ -181,6 +220,12 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     view = relay_view(state, lo, shard_size)
     slot_ids = jnp.arange(Wl, dtype=jnp.int32)
 
+    if exchange_fn is None:
+        def exchange_fn(payload, *, cap, r, channel):
+            a, left, n = exchange_walkers(payload, shard_size, num_shards,
+                                          axis, cap=cap)
+            return a, left, n, jnp.zeros((3,), jnp.int32)
+
     # Initial residents queue at the shard owning their start vertex;
     # the allocator drains the queue into slots from round 1 on (a
     # start-vertex hot spot may exceed Wl — exactness does not care).
@@ -195,6 +240,11 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     pend_wid0 = jnp.full((Wl,), -1, jnp.int32)
     acc0 = jnp.full((Wb, L + 1), -1, jnp.int32)
     pending0 = jax.lax.psum(resident0.sum(dtype=jnp.int32), axis_name=axis)
+    # Census/fault carries (dead weight unless census=True): a per-shard
+    # wid bitmap of walkers seen reaching a terminal step here, and the
+    # accumulated (drop, dup, delay) injection counts from exchange_fn.
+    fin0 = jnp.zeros((W,), bool)
+    faults0 = jnp.zeros((3,), jnp.int32)
 
     def cond(c):
         r = c[0]
@@ -202,7 +252,8 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
         return (pending > 0) & (r < max_rounds)
 
     def body(c):
-        r, pend_path, pend_wid, waiting, outbox, acc, ovf, peak, _p = c
+        (r, pend_path, pend_wid, waiting, outbox, acc, ovf, peak,
+         fin, faults, _p) = c
 
         # -- place: free-list allocator drains the waiting queue into
         # open slots (a slot stays pinned while it holds an undelivered
@@ -246,15 +297,21 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
         # at the receiver (placement happens next round), spills return
         # to the sender's outbox.
         fr_ok = occupied & (frontier[:, 0] >= 0)
+        # census: an occupied slot whose frontier is exhausted finished
+        # its walk HERE — mark its wid.  De-duping by wid (a bitmap, not
+        # a counter) is what makes chaos duplicates unable to mask a
+        # dropped walker: the same wid finishing twice sets one bit.
+        term = occupied & (frontier[:, 0] < 0)
+        fin = fin.at[jnp.where(term, slot_wid, W)].set(True, mode="drop")
         new_fr = jnp.where(
             fr_ok[:, None],
             jnp.stack([frontier[:, 0], frontier[:, 1], slot_wid], -1), -1)
         pay_w = jnp.concatenate([outbox, new_fr], axis=0)
-        arrived, spill_w, n_spill_w = exchange_walkers(
-            pay_w, shard_size, num_shards, axis, cap=mailbox_cap)
-        outbox = _compact_rows(spill_w, W)
-        waiting = _compact_rows(
-            jnp.concatenate([waiting, arrived], axis=0), W)
+        arrived, spill_w, n_spill_w, f_w = exchange_fn(
+            pay_w, cap=mailbox_cap, r=r, channel=0)
+        outbox = _compact_rows(_dedup_wid(spill_w), W)
+        waiting = _compact_rows(_dedup_wid(
+            jnp.concatenate([waiting, arrived], axis=0)), W)
 
         # -- route paths: every slot that walked this round emits its
         # path columns (translated to global ids) toward the walker's
@@ -275,8 +332,9 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
              jnp.where(remote, row_wid, -1)[:, None],
              jnp.where(remote, slot_ids, -1)[:, None],
              jnp.where(remote[:, None], row_path, -1)], axis=1)
-        got, spill_p, n_spill_p = exchange_walkers(
-            pay_p, shard_size, num_shards, axis, cap=path_cap)
+        got, spill_p, n_spill_p, f_p = exchange_fn(
+            pay_p, cap=path_cap, r=r, channel=1)
+        faults = faults + f_w + f_p
         g_ok = got[:, 0] >= 0
         grow = jnp.where(g_ok, got[:, 1] - sidx * Wb, Wb)
         acc = acc.at[grow].max(
@@ -297,26 +355,37 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
             + (pend_wid >= 0).sum(dtype=jnp.int32), axis_name=axis)
         ovf = ovf + jax.lax.psum(n_spill_w + n_spill_p, axis_name=axis)
         return (r + 1, pend_path, pend_wid, waiting, outbox, acc, ovf,
-                peak, pending)
+                peak, fin, faults, pending)
 
-    rounds, _, _, _, _, acc, ovf, peak, _ = jax.lax.while_loop(
+    (rounds, _, _, _, _, acc, ovf, peak, fin, faults,
+     pending_final) = jax.lax.while_loop(
         cond, body,
         (jnp.int32(0), pend_path0, pend_wid0, waiting0, outbox0, acc0,
-         jnp.int32(0), jnp.int32(0), pending0))
+         jnp.int32(0), jnp.int32(0), fin0, faults0, pending0))
 
     # acc IS this shard's home block: walker wid's row landed here iff
     # wid // Wb == sidx, so the P(axis)-concatenated output is the
     # coherent (W, L+1) array with no cross-shard stitch collective.
+    outs = [acc, rounds, ovf]
     if diagnostics:
-        return acc, rounds, ovf, jax.lax.pmax(peak, axis_name=axis)
-    return acc, rounds, ovf
+        outs.append(jax.lax.pmax(peak, axis_name=axis))
+    if census:
+        # Collectives run ONCE at exit, not per round: a wid finished iff
+        # any shard's bitmap has its bit (walkers that started as -1 free
+        # slots never set a bit and are excluded by construction).
+        fin_any = jax.lax.psum(fin.astype(jnp.int32), axis_name=axis) > 0
+        outs.append(jnp.sum(fin_any.astype(jnp.int32)))
+        outs.append(pending_final)
+        outs.append(jax.lax.psum(faults, axis_name=axis))
+    return tuple(outs)
 
 
 def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
                max_rounds: int | None = None,
                slot_slack: int | None = None,
                path_cap: int | None = None,
-               diagnostics: bool = False):
+               diagnostics: bool = False,
+               exchange_fn=None, census: bool = False):
     """Build the shard_mapped relay: the one wrapper every layer shares.
 
     Vertex-shards ``cfg.num_vertices`` over ALL of ``mesh``'s axes and
@@ -327,10 +396,14 @@ def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
     count), ``seed`` (1,) int32 (``ops.seed_from_key``), ``u`` optional
     (L, W, 6) fed uniforms.  ``slot_slack`` sizes the compacted
     per-shard slot arrays (``slot_count``); ``diagnostics=True``
-    appends the peak per-shard slot occupancy as a fourth output.  Used
-    by the ``walk_relay`` launch cell, the sharded
-    ``DynamicWalkEngine``, benchmarks and tests, so the divisibility
-    validation and spec plumbing live in exactly one place.
+    appends the peak per-shard slot occupancy as a fourth output.
+    ``exchange_fn``/``census`` thread to ``relay_local`` — the chaos
+    harness (``distributed/chaos.py``) swaps the mailbox all_to_all and
+    reads the (distinct-finished, pending-at-exit, faults) census
+    outputs it appends.  Used by the ``walk_relay`` launch cell, the
+    sharded ``DynamicWalkEngine``, benchmarks and tests, so the
+    divisibility validation and spec plumbing live in exactly one
+    place.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -352,12 +425,15 @@ def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
             num_shards=num_shards, shard_size=shard_size, axis=axes,
             mailbox_cap=mailbox_cap, max_rounds=max_rounds,
             slot_slack=slot_slack, path_cap=path_cap,
-            diagnostics=diagnostics)
+            diagnostics=diagnostics, exchange_fn=exchange_fn,
+            census=census)
 
     def run(state, walkers, seed, u=None):
         sspec = jax.tree.map(lambda _: P(axes), state)
         in_specs = (sspec, P(), P()) + (() if u is None else (P(),))
-        out_specs = (P(axes), P(), P()) + ((P(),) if diagnostics else ())
+        out_specs = (P(axes), P(), P()) \
+            + ((P(),) if diagnostics else ()) \
+            + ((P(), P(), P()) if census else ())
         f = shard_map(local, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=False)
         args = (state, walkers, seed) + (() if u is None else (u,))

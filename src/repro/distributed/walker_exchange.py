@@ -33,7 +33,32 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["exchange_walkers", "make_walk_step", "route_tag"]
+__all__ = ["exchange_walkers", "make_walk_step", "merge_into_free",
+           "route_tag"]
+
+
+def merge_into_free(buf, rows, mask):
+    """Scatter ``rows[mask]`` into the free rows of ``buf``.
+
+    ``buf`` (N, F) and ``rows`` (M, F) are record buffers whose field 0
+    is >= 0 on live rows; ``mask`` (M,) bool selects rows to place.
+    Selected rows land in ``buf``'s free rows (field 0 < 0), first-free
+    first; selection beyond the free capacity is dropped.  Returns
+    ``(buf, placed)`` with ``placed`` the int32 count actually merged —
+    callers that must not lose rows check ``placed == mask.sum()`` (the
+    chaos harness counts the shortfall as forced drops).  Placement
+    order is deterministic (stable argsorts), which keeps seeded fault
+    schedules reproducible."""
+    N = buf.shape[0]
+    M = rows.shape[0]
+    free = buf[:, 0] < 0
+    forder = jnp.argsort(~free)                 # free row indices first
+    rorder = jnp.argsort(~mask)                 # selected rows first
+    k = jnp.arange(M, dtype=jnp.int32)
+    ok = (k < mask.sum(dtype=jnp.int32)) & (k < free.sum(dtype=jnp.int32))
+    tgt = jnp.where(ok, forder[jnp.minimum(k, N - 1)], N)
+    buf = buf.at[tgt].set(rows[rorder], mode="drop")
+    return buf, ok.sum(dtype=jnp.int32)
 
 
 def route_tag(shard, shard_size: int):

@@ -17,7 +17,42 @@ from typing import Iterator, NamedTuple, Tuple
 
 import numpy as np
 
-__all__ = ["UpdateStream", "make_update_stream", "rounds_on_device"]
+__all__ = ["UpdateStream", "make_update_stream", "rounds_on_device",
+           "validate_edges"]
+
+
+def validate_edges(src, dst, w, *, num_vertices=None, fp_bias=False):
+    """Per-edge validity mask for a host edge list (DESIGN.md §11).
+
+    Flags out-of-range endpoints (negative always; ``>= num_vertices``
+    when a vertex count is given) and degenerate biases — NaN/inf/
+    non-positive in fp mode, ``< 1`` in integer-bias mode.  Returns
+    ``(ok (m,) bool, reasons list[str])`` where ``reasons`` names each
+    distinct failure with a count — the message ``make_update_stream``
+    raises with, and what a quarantining caller should log.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = np.asarray(w)
+    bad_v = (src < 0) | (dst < 0)
+    if num_vertices is not None:
+        bad_v |= (src >= num_vertices) | (dst >= num_vertices)
+    if fp_bias or np.issubdtype(w.dtype, np.floating):
+        bad_w = ~np.isfinite(w) | (w <= 0)
+    else:
+        bad_w = w < 1
+    reasons = []
+    if bad_v.any():
+        idx = np.nonzero(bad_v)[0][:5]
+        reasons.append(
+            f"{int(bad_v.sum())} out-of-range endpoint(s), e.g. "
+            + ", ".join(f"({int(src[i])},{int(dst[i])})" for i in idx))
+    if bad_w.any():
+        idx = np.nonzero(bad_w)[0][:5]
+        reasons.append(
+            f"{int(bad_w.sum())} invalid weight(s), e.g. "
+            + ", ".join(f"{w[i]!r}" for i in idx))
+    return ~(bad_v | bad_w), reasons
 
 
 class UpdateStream(NamedTuple):
@@ -32,13 +67,30 @@ class UpdateStream(NamedTuple):
 
 def make_update_stream(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
                        *, batch_size: int, rounds: int = 10,
-                       mode: str = "mixed", seed: int = 0) -> UpdateStream:
+                       mode: str = "mixed", seed: int = 0,
+                       num_vertices: int = None,
+                       on_invalid: str = "raise") -> UpdateStream:
     """Build the paper's update workload from a full edge list.
 
     ``mode``: ``insertion`` | ``deletion`` | ``mixed`` (§6.1 "Dynamic
     updates").  ``batch_size`` is the paper's BATCHSIZE (100K at full scale;
     laptop benchmarks shrink it proportionally).
+
+    Inputs are validated (``validate_edges``): NaN/inf/non-positive
+    weights and out-of-range vertex ids (negative; ``>= num_vertices``
+    when given) would otherwise flow straight into the alias build.
+    ``on_invalid``: ``"raise"`` (default) raises ``ValueError`` naming
+    the offenders; ``"drop"`` silently builds the stream from the valid
+    edges only — the quarantine-style choice for dirty real-world lists.
     """
+    ok, reasons = validate_edges(src, dst, w, num_vertices=num_vertices)
+    if not ok.all():
+        if on_invalid == "raise":
+            raise ValueError("invalid edges in update-stream input: "
+                             + "; ".join(reasons))
+        if on_invalid != "drop":
+            raise ValueError(f"unknown on_invalid mode {on_invalid!r}")
+        src, dst, w = src[ok], dst[ok], w[ok]
     rng = np.random.default_rng(seed)
     m = len(src)
     total = rounds * batch_size

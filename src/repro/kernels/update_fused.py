@@ -71,7 +71,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import radix
 from repro.core.alias import AliasTable
 from repro.core.dyngraph import DENSE, BingoConfig, BingoState, classify
-from repro.core.updates import UpdateStats, _padded_unique
+from repro.core.updates import (NUM_REASONS, R_ABSENT, R_CAPACITY, R_VERTEX,
+                                UpdateStats, _padded_unique)
 
 __all__ = ["update_fused_pallas"]
 
@@ -328,8 +329,12 @@ def update_fused_pallas(state: BingoState, cfg: BingoConfig, is_insert,
     v = jnp.asarray(v, jnp.int32)
     if active is None:
         active = jnp.ones((B,), bool)
-    ins = is_insert & active
-    dele = (~is_insert) & active
+    # Same lane-validity contract as the reference (reject-and-count —
+    # a negative u would wrap in the prepass scatters): see
+    # ``batched_update``'s robustness note.
+    lane_ok = (u >= 0) & (u < V) & (v >= 0)
+    ins = is_insert & active & lane_ok
+    dele = (~is_insert) & active & lane_ok
     if cfg.fp_bias:
         w_int, w_frac = radix.decompose_fp(w, cfg.lam)
     else:
@@ -337,7 +342,7 @@ def update_fused_pallas(state: BingoState, cfg: BingoConfig, is_insert,
         w_frac = jnp.zeros((B,), jnp.float32)
 
     # ---- ordering prepass (the reference's stage-1/2 sorts, verbatim) ----
-    U = _padded_unique(jnp.where(active, u, V), V)              # (B,)
+    U = _padded_unique(jnp.where(ins | dele, u, V), V)           # (B,)
     Uc = jnp.minimum(U, V - 1)
     idx = jnp.arange(B, dtype=jnp.int32)
 
@@ -481,4 +486,9 @@ def update_fused_pallas(state: BingoState, cfg: BingoConfig, is_insert,
     changed = (old_gtype != new_gtype) & valid_row
     trans = jnp.zeros((25,), jnp.int32).at[
         jnp.where(changed, pair, 25)].add(1, mode="drop").reshape(5, 5)
-    return st, UpdateStats(n_ins, n_del, trans)
+    rejected = (
+        jnp.zeros((NUM_REASONS,), jnp.int32)
+        .at[R_VERTEX].set(jnp.sum(active & ~lane_ok, dtype=jnp.int32))
+        .at[R_CAPACITY].set(jnp.sum(ins, dtype=jnp.int32) - n_ins)
+        .at[R_ABSENT].set(jnp.sum(dele, dtype=jnp.int32) - n_del))
+    return st, UpdateStats(n_ins, n_del, trans, rejected)

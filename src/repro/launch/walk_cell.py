@@ -303,12 +303,20 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
         # walks its resident walkers through the fresh tables
         # (walk_whole's shard-local adjacency view).  Per-shard
         # UpdateStats are psum'd so the cell reports global counts.
+        from repro.serve.guard import valid_lanes
+
         def update_walk_local(state, is_insert, u, v, w, walkers, seed):
             sidx = jax.lax.axis_index(dp[0])
             for a in dp[1:]:
                 sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
             lo = sidx * shard_size
-            owned_u = (u >= lo) & (u < lo + shard_size)
+            # valid_lanes checks endpoints against the GLOBAL vertex
+            # count — the one range check the shard-local pipeline
+            # cannot do itself (its cfg.num_vertices is the shard size
+            # while v stays a global id), so a v >= V lane would
+            # otherwise be applied by its owner (DESIGN.md §11).
+            owned_u = valid_lanes(bcfg, u, v) \
+                & (u >= lo) & (u < lo + shard_size)
             lu = jnp.where(owned_u, u - lo, 0)
             st, stats = engine.apply_updates(state, lcfg, is_insert, lu,
                                              v, w, active=owned_u)

@@ -1,8 +1,14 @@
 """Serving substrate: batched LM decode engine with continuous batching,
 plus the streaming dynamic-walk engine (coalesced update rounds
-interleaved with whole-walk batches over one donated BingoState)."""
+interleaved with whole-walk batches over one donated BingoState), its
+ingestion guard (validated updates + quarantine, DESIGN.md §11) and the
+crash-exact checkpoint/WAL recovery wrapper."""
 
 from repro.serve.dynwalk import DynamicWalkEngine
 from repro.serve.engine import DecodeEngine, ServeRequest
+from repro.serve.guard import GuardPolicy, IngestGuard
+from repro.serve.recovery import RecoverableEngine, WriteAheadLog
 
-__all__ = ["DecodeEngine", "DynamicWalkEngine", "ServeRequest"]
+__all__ = ["DecodeEngine", "DynamicWalkEngine", "ServeRequest",
+           "GuardPolicy", "IngestGuard", "RecoverableEngine",
+           "WriteAheadLog"]

@@ -48,11 +48,13 @@ from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dyngraph import BingoConfig, BingoState
-from repro.core.updates import UpdateStats, make_updater
+from repro.core.updates import R_OK, UpdateStats, make_updater
 from repro.core.walks import WalkParams, make_walker
 from repro.graph.streams import UpdateStream, rounds_on_device
+from repro.serve.guard import GuardPolicy, IngestGuard
 
 __all__ = ["DynamicWalkEngine"]
 
@@ -72,17 +74,27 @@ class DynamicWalkEngine:
                  params: WalkParams = WalkParams(), *,
                  backend: Optional[str] = None,
                  whole_walk: Optional[bool] = None, seed: int = 0,
-                 mesh=None, mailbox_cap: Optional[int] = None):
+                 mesh=None, mailbox_cap: Optional[int] = None,
+                 guard=None):
         self.cfg = cfg
         self.params = params
         self._state = state
         if mesh is None:
-            self._update = make_updater(cfg, backend=backend)
+            self._update = make_updater(cfg, backend=backend,
+                                        with_active=True)
             self._walk = make_walker(state, cfg, params, backend=backend,
                                      whole_walk=whole_walk)
         else:
             self._state, self._update, self._walk = self._build_sharded(
                 state, cfg, params, backend, mesh, mailbox_cap)
+        # guard=True -> default policy; guard=GuardPolicy(...) -> custom.
+        # The classifier checks endpoints against the GLOBAL cfg — in
+        # sharded mode it runs over the partitioned state as plain jnp.
+        self.guard: Optional[IngestGuard] = None
+        if guard:
+            policy = guard if isinstance(guard, GuardPolicy) \
+                else GuardPolicy()
+            self.guard = IngestGuard(cfg, policy)
         self._key = jax.random.key(seed)
         self.rounds_ingested = 0
         self.updates_applied = 0
@@ -117,9 +129,9 @@ class DynamicWalkEngine:
         sspec = jax.tree.map(
             lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), state)
 
-        def update_local(st, is_insert, uu, vv, ww):
+        def update_local(st, is_insert, uu, vv, ww, active):
             lo = shard_index(mesh) * shard_size
-            owned = (uu >= lo) & (uu < lo + shard_size)
+            owned = (uu >= lo) & (uu < lo + shard_size) & active
             lu = jnp.where(owned, uu - lo, 0)
             st, stats = bk.apply_updates(st, lcfg, is_insert, lu, vv, ww,
                                          active=owned)
@@ -127,7 +139,7 @@ class DynamicWalkEngine:
                 lambda t: jax.lax.psum(t, axis_name=axes), stats)
 
         smap_upd = shard_map(update_local, mesh=mesh,
-                             in_specs=(sspec, P(), P(), P(), P()),
+                             in_specs=(sspec, P(), P(), P(), P(), P()),
                              out_specs=(sspec, P()), check_rep=False)
 
         update = jax.jit(smap_upd, donate_argnums=0)
@@ -150,11 +162,62 @@ class DynamicWalkEngine:
 
     # -- serving surface -----------------------------------------------------
     def ingest(self, is_insert, u, v, w) -> UpdateStats:
-        """Apply one batched update round; returns its ``UpdateStats``."""
-        self._state, stats = self._update(self._state, is_insert, u, v, w)
+        """Apply one batched update round; returns its ``UpdateStats``.
+
+        Unguarded, every lane goes straight to the update pipeline
+        (which still rejects-and-counts unapplyable lanes — DESIGN.md
+        §11).  With ``guard=`` the device-side pre-pass classifies the
+        round first: only OK lanes are applied, rejects land in the
+        quarantine buffer / pending-overflow queue, and the returned
+        ``rejected`` counters carry the guard's reason tally (the
+        engine-level tally is zero by construction after the guard).
+        Pending capacity overflows are retried — one bounded batch —
+        after any round whose deletes may have freed slots.
+        """
+        B = int(u.shape[0])
+        if self.guard is None:
+            self._state, stats = self._update(
+                self._state, is_insert, u, v, w, jnp.ones((B,), bool))
+            self.rounds_ingested += 1
+            self.updates_applied += B
+            return stats
+
+        g = self.guard
+        rnd = self.rounds_ingested
+        reasons = g.classify(self._state, is_insert, u, v, w)
+        self._state, stats = self._update(
+            self._state, is_insert, u, v, w, reasons == R_OK)
+        counts = g.account(rnd, is_insert, u, v, w, np.asarray(reasons))
+        g.deletes_since_retry += int(stats.del_applied)
+        stats = stats._replace(
+            rejected=stats.rejected + jnp.asarray(counts, jnp.int32))
+        if g.want_retry():
+            entries, ru, rv, rw = g.take_retry()
+            r_ins = jnp.ones((g.policy.retry_batch,), bool)
+            ru, rv, rw = jnp.asarray(ru), jnp.asarray(rv), jnp.asarray(rw)
+            r_reasons = g.classify(self._state, r_ins, ru, rv, rw)
+            self._state, rstats = self._update(
+                self._state, r_ins, ru, rv, rw, r_reasons == R_OK)
+            applied = g.settle_retry(rnd, entries, np.asarray(r_reasons))
+            if applied:
+                stats = stats._replace(
+                    ins_applied=stats.ins_applied + rstats.ins_applied,
+                    transitions=stats.transitions + rstats.transitions)
         self.rounds_ingested += 1
-        self.updates_applied += int(u.shape[0])
+        self.updates_applied += B
         return stats
+
+    def audit(self) -> dict:
+        """Device-side invariant sweep of the live state (DESIGN.md §11).
+
+        Returns ``{rule: violating-vertex count}`` over the cheap
+        jit-able subset (``core/invariants.check_state_device``) —
+        all-zero for a healthy state.  Works on the sharded state too
+        (plain jnp; GSPMD partitions the row scans).
+        """
+        from repro.core.invariants import DEVICE_RULES, check_state_device
+        counts = np.asarray(check_state_device(self._state, self.cfg))
+        return dict(zip(DEVICE_RULES, counts.tolist()))
 
     def walk(self, starts, key=None):
         """Serve one whole-walk batch; returns ``(B, length+1)`` paths."""

@@ -1,0 +1,214 @@
+"""Crash-exact serving recovery: snapshots + a write-ahead log.
+
+A ``DynamicWalkEngine`` threads ONE donated ``BingoState`` through every
+update round — fast, but a crash loses the graph.  This module makes the
+serving loop recoverable with a *bit-exact* contract (DESIGN.md §11):
+
+* **Write-ahead log** (``WriteAheadLog``): every coalesced update round
+  is appended — atomically, append-*before*-apply — as a monotonically
+  sequenced record; walk-key advances are logged too (one record per
+  ``walk()`` call that consumed the engine's internal key).  A record
+  only exists if its append completed, and the engine only applies a
+  round after its record committed, so any crash point leaves the WAL a
+  strict superset of the applied rounds: replaying it is exactly-once.
+* **Generation-stamped snapshots** via ``train/checkpoint`` — the
+  ``AsyncCheckpointer`` writes the host-copied ``BingoState`` plus a
+  manifest ``extra`` carrying the WAL position ("generation"), the raw
+  PRNG key data, the serving counters, and the guard's quarantine /
+  pending queues.  Saves are atomic (tmp + rename) and run on a
+  background thread; the host copy happens before serving continues,
+  so donation never races the writer.
+* **Restore = snapshot + WAL replay** (``RecoverableEngine.restore``):
+  rebuild the engine from the newest snapshot, re-ingest every WAL
+  round past its generation through the same guarded path, and re-split
+  the walk key once per logged walk.  Because the walk PRNG is the
+  counter hash ``uniforms_at(seed, wid, t)`` (state-free, keyed only by
+  the derived seed), the restored engine's next walk draws the *same*
+  uniforms as the uninterrupted run — paths, ``UpdateStats`` and
+  quarantine counters are pinned bit-identical at 1 and 8 shards
+  (``tests/test_recovery.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, empty_state
+from repro.core.walks import WalkParams
+from repro.serve.dynwalk import DynamicWalkEngine
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint)
+
+__all__ = ["WriteAheadLog", "RecoverableEngine"]
+
+
+class WriteAheadLog:
+    """Sequenced, atomic, append-only log of serving events.
+
+    One ``<seq>.npz`` per record (``os.replace`` commit — a torn write
+    leaves only an ignored ``.tmp`` file, and by append-before-apply a
+    missing tail record is a round that was never applied).  Record
+    kinds: ``round`` (is_insert/u/v/w arrays of one coalesced update
+    round) and ``walks`` (an internal-key advance: ``splits`` key
+    splits serving ``served`` walks).
+    """
+
+    def __init__(self, wal_dir: str):
+        self.wal_dir = wal_dir
+        os.makedirs(wal_dir, exist_ok=True)
+        seqs = self._seqs()
+        self.next_seq = (seqs[-1] + 1) if seqs else 0
+
+    def _seqs(self):
+        return sorted(
+            int(f.split(".")[0]) for f in os.listdir(self.wal_dir)
+            if f.endswith(".npz") and ".tmp" not in f)
+
+    def _append(self, **payload) -> int:
+        seq = self.next_seq
+        final = os.path.join(self.wal_dir, f"{seq:010d}.npz")
+        tmp = final + f".tmp-{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)                 # atomic commit
+        self.next_seq = seq + 1
+        return seq
+
+    def append_round(self, is_insert, u, v, w) -> int:
+        return self._append(kind=np.asarray("round"),
+                            is_insert=np.asarray(is_insert, bool),
+                            u=np.asarray(u, np.int32),
+                            v=np.asarray(v, np.int32),
+                            w=np.asarray(w))
+
+    def append_walks(self, splits: int, served: int) -> int:
+        return self._append(kind=np.asarray("walks"),
+                            splits=np.asarray(splits, np.int64),
+                            served=np.asarray(served, np.int64))
+
+    def replay(self, from_seq: int = 0) -> Iterator[Tuple[int, str, dict]]:
+        """Yield ``(seq, kind, payload)`` for records with seq >= from_seq."""
+        for seq in self._seqs():
+            if seq < from_seq:
+                continue
+            with np.load(os.path.join(self.wal_dir,
+                                      f"{seq:010d}.npz")) as z:
+                payload = {k: z[k] for k in z.files if k != "kind"}
+                yield seq, str(z["kind"]), payload
+
+
+class RecoverableEngine:
+    """WAL + snapshot wrapper around a ``DynamicWalkEngine``.
+
+    Same serving surface (``ingest`` / ``walk``); every mutation is
+    logged before it is applied, and ``checkpoint_every=k`` snapshots
+    the full state every k ingested rounds (0 = only on explicit
+    ``checkpoint()`` calls).  A baseline generation-0 snapshot is
+    written at construction so restore always has an anchor.
+    """
+
+    def __init__(self, engine: DynamicWalkEngine, *, ckpt_dir: str,
+                 wal_dir: Optional[str] = None, checkpoint_every: int = 0,
+                 keep: int = 3, _snapshot_now: bool = True):
+        self.engine = engine
+        self.ckpt_dir = ckpt_dir
+        self.wal_dir = wal_dir or os.path.join(ckpt_dir, "wal")
+        self.wal = WriteAheadLog(self.wal_dir)
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep=keep)
+        self.checkpoint_every = checkpoint_every
+        self._rounds_since_snapshot = 0
+        if _snapshot_now:
+            self.checkpoint()
+
+    # -- serving surface (mirrors DynamicWalkEngine) -----------------------
+    @property
+    def state(self):
+        return self.engine.state
+
+    def ingest(self, is_insert, u, v, w):
+        self.wal.append_round(is_insert, u, v, w)   # append BEFORE apply
+        stats = self.engine.ingest(is_insert, u, v, w)
+        self._rounds_since_snapshot += 1
+        if (self.checkpoint_every
+                and self._rounds_since_snapshot >= self.checkpoint_every):
+            self.checkpoint()
+        return stats
+
+    def walk(self, starts, key=None):
+        if key is None:                      # consumes the internal key
+            self.wal.append_walks(1, int(starts.shape[0]))
+        return self.engine.walk(starts, key=key)
+
+    # -- snapshot / restore ------------------------------------------------
+    def checkpoint(self) -> int:
+        """Write a generation-stamped snapshot; returns its generation.
+
+        Generation g means "WAL records 0..g-1 are folded into this
+        snapshot"; restore replays records with seq >= g.
+        """
+        e = self.engine
+        gen = self.wal.next_seq
+        extra = {
+            "generation": gen,
+            "rounds_ingested": e.rounds_ingested,
+            "updates_applied": e.updates_applied,
+            "walks_served": e.walks_served,
+            "key_data": np.asarray(
+                jax.random.key_data(e._key)).tolist(),
+            "guard": e.guard.snapshot() if e.guard is not None else None,
+        }
+        self.ckpt.save(gen, e.state, extra)
+        self._rounds_since_snapshot = 0
+        return gen
+
+    def wait(self):
+        self.ckpt.wait()
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, cfg: BingoConfig,
+                params: WalkParams = WalkParams(), *,
+                wal_dir: Optional[str] = None, checkpoint_every: int = 0,
+                keep: int = 3, **engine_kwargs) -> "RecoverableEngine":
+        """Snapshot + WAL replay -> a bit-identical serving engine.
+
+        ``engine_kwargs`` go to ``DynamicWalkEngine`` (backend, mesh,
+        guard, ...) and must match the crashed engine's construction for
+        the bit-exactness pin to hold.
+        """
+        gen = latest_step(ckpt_dir)
+        if gen is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        state = restore_checkpoint(ckpt_dir, gen, like=empty_state(cfg))
+        with open(os.path.join(ckpt_dir, f"step_{gen}",
+                               "manifest.json")) as f:
+            extra = json.load(f)["extra"]
+
+        engine = DynamicWalkEngine(state, cfg, params, **engine_kwargs)
+        engine._key = jax.random.wrap_key_data(
+            jnp.asarray(extra["key_data"], jnp.uint32))
+        engine.rounds_ingested = int(extra["rounds_ingested"])
+        engine.updates_applied = int(extra["updates_applied"])
+        engine.walks_served = int(extra["walks_served"])
+        if engine.guard is not None and extra["guard"] is not None:
+            engine.guard.load_snapshot(extra["guard"])
+
+        rec = cls(engine, ckpt_dir=ckpt_dir, wal_dir=wal_dir,
+                  checkpoint_every=checkpoint_every, keep=keep,
+                  _snapshot_now=False)
+        for _seq, kind, p in rec.wal.replay(from_seq=gen):
+            if kind == "round":
+                engine.ingest(p["is_insert"], p["u"], p["v"], p["w"])
+            elif kind == "walks":
+                for _ in range(int(p["splits"])):
+                    engine._key, _ = jax.random.split(engine._key)
+                engine.walks_served += int(p["served"])
+        return rec

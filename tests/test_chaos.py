@@ -1,0 +1,145 @@
+"""Relay fault injection (DESIGN.md §11, ``distributed/chaos.py``).
+
+The contract under a hostile transport: recoverable fault schedules
+(duplication, delay, mailbox starvation) leave the stitched paths
+*bit-identical* to the fault-free relay with zero walkers lost;
+unrecoverable ones (drops, a killed transport) raise a structured
+``RelayIntegrityError`` — the relay never silently truncates.  Chaos
+runs need the 8-fake-device mesh (the chaos-recovery CI job sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walks
+from repro.core.backend import get_backend
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.distributed.chaos import (ChaosSchedule, RelayIntegrityError,
+                                     audit_paths, run_chaos_relay)
+from repro.distributed.relay import make_relay
+from repro.distributed.walker_exchange import merge_into_free
+from repro.kernels.ops import seed_from_key
+from tests.conftest import random_graph
+
+DEVS = len(jax.devices())
+multi = pytest.mark.skipif(
+    DEVS < 8, reason="needs 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+B, L = 24, 10
+
+
+def _setup():
+    V, C = 32, 16
+    src, dst, w = random_graph(V, C, max_bias=63, seed=3)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=6,
+                      base_log2=1, lam=4.0)
+    st = from_edges(cfg, src, dst, w)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    walkers = jnp.arange(B, dtype=jnp.int32) % V
+    key = jax.random.key(0)
+    return st, cfg, params, walkers, seed_from_key(key), key
+
+
+# -- host-side pieces (no mesh needed) ------------------------------------
+
+def test_audit_paths_structural():
+    starts = np.array([3, 5, -1, 7])
+    clean = np.array([[3, 1, 2], [5, 0, -1], [-1, -1, -1], [7, 7, 7]])
+    assert audit_paths(clean, starts) == []
+    # wrong start / mid-path hole / data in a free slot
+    assert any("expected 3" in p
+               for p in audit_paths(clean[[1, 1, 2, 3]], starts))
+    holed = clean.copy()
+    holed[0, 1] = -1
+    assert any("hole" in p for p in audit_paths(holed, starts))
+    leaked = clean.copy()
+    leaked[2, 0] = 4
+    assert any("free slot" in p for p in audit_paths(leaked, starts))
+    # full_length: a truncated row on a never-stopping walk is a finding
+    assert any("truncated" in p
+               for p in audit_paths(clean, starts, full_length=True))
+
+
+def test_merge_into_free_places_and_counts():
+    buf = jnp.array([[4, 0], [-1, -1], [7, 1], [-1, -1]], jnp.int32)
+    rows = jnp.array([[9, 9], [8, 8], [6, 6]], jnp.int32)
+    mask = jnp.array([True, False, True])
+    out, placed = merge_into_free(buf, rows, mask)
+    assert int(placed) == 2
+    got = sorted(map(tuple, np.asarray(out).tolist()))
+    assert (9, 9) in got and (6, 6) in got and (4, 0) in got
+    # overflow: three selected rows, one free slot -> shortfall reported
+    buf1 = jnp.array([[4, 0], [-1, -1], [7, 1]], jnp.int32)
+    _, placed1 = merge_into_free(buf1, rows, jnp.ones((3,), bool))
+    assert int(placed1) == 1
+
+
+# -- the chaos sweep ------------------------------------------------------
+
+@multi
+def test_census_matches_production_on_clean_transport():
+    st, cfg, params, walkers, seed, key = _setup()
+    mesh = jax.make_mesh((8,), ("data",))
+    bk = get_backend("pallas")
+    base = make_relay(bk, cfg, params, mesh)(st, walkers, seed)
+    run = make_relay(bk, cfg, params, mesh, diagnostics=True, census=True)
+    paths, _r, _o, _peak, fin, pend, faults = run(st, walkers, seed)
+    np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(paths))
+    assert int(fin) == B and int(pend) == 0
+    assert np.asarray(faults).tolist() == [0, 0, 0]
+
+
+@multi
+@pytest.mark.parametrize("sched", [
+    ChaosSchedule(seed=1, delay=0.3),
+    ChaosSchedule(seed=2, dup=0.3),
+    ChaosSchedule(seed=4, dup=0.2, delay=0.2, mailbox_cap=1,
+                  path_faults=True),
+], ids=["delay", "dup", "starve+dup+delay+pathfaults"])
+def test_recoverable_schedules_stay_bit_exact(sched):
+    """Duplicates / delays / starvation: exact conservation AND the
+    paths pin bit-identical to the fault-free single-shard walk."""
+    st, cfg, params, walkers, seed, key = _setup()
+    mesh = jax.make_mesh((8,), ("data",))
+    bk = get_backend("pallas")
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    paths, report = run_chaos_relay(bk, cfg, params, mesh, st, walkers,
+                                    seed, sched, full_length=True)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    assert report.lost == 0 and report.pending_at_exit == 0
+    if sched.dup:
+        assert report.duplicated > 0
+    if sched.delay:
+        assert report.delayed > 0
+
+
+@multi
+def test_dropped_walkers_raise_structured_diagnostic():
+    st, cfg, params, walkers, seed, key = _setup()
+    mesh = jax.make_mesh((8,), ("data",))
+    with pytest.raises(RelayIntegrityError) as exc:
+        run_chaos_relay(get_backend("pallas"), cfg, params, mesh, st,
+                        walkers, seed, ChaosSchedule(seed=5, drop=0.15))
+    rep = exc.value.report
+    assert rep.lost > 0 and rep.dropped > 0
+    assert rep.finished + rep.lost == rep.walkers
+    assert "lost" in str(exc.value)
+
+
+@multi
+def test_killed_transport_raises_with_pending_work():
+    st, cfg, params, walkers, seed, key = _setup()
+    mesh = jax.make_mesh((8,), ("data",))
+    with pytest.raises(RelayIntegrityError) as exc:
+        run_chaos_relay(get_backend("pallas"), cfg, params, mesh, st,
+                        walkers, seed, ChaosSchedule(seed=6, kill_round=1),
+                        max_rounds=12)
+    rep = exc.value.report
+    assert rep.pending_at_exit > 0
+    assert rep.rounds == 12                 # gave up against the bound

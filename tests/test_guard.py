@@ -1,0 +1,260 @@
+"""Validated ingestion + quarantine (DESIGN.md §11).
+
+The guard contract: the device-side classifier assigns every lane of an
+update round a reason code that exactly predicts the §5.2 oracle — a
+lane marked OK always applies (engine-level reject counters stay zero
+after the guard) — and the host-side ``IngestGuard`` conserves every
+update: ``accepted + quarantined + pending == ingested`` after every
+round, with capacity overflows retried after deletes free slots.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.updates import (R_ABSENT, R_CAPACITY, R_DUP, R_OK,
+                                R_VERTEX, R_WEIGHT, make_updater)
+from repro.core.walks import WalkParams
+from repro.graph.streams import make_update_stream, validate_edges
+from repro.serve.dynwalk import DynamicWalkEngine
+from repro.serve.guard import GuardPolicy, IngestGuard, make_classifier, \
+    valid_lanes
+from tests.conftest import random_graph
+
+
+def _state(V=8, C=4, **kw):
+    """Known rows: v0 -> {1,2,3} (deg 3), v1 -> {0}, v6 full (deg C)."""
+    src = np.array([0, 0, 0, 1] + [6] * C, np.int32)
+    dst = np.array([1, 2, 3, 0] + list(range(2, 2 + C)), np.int32)
+    w = np.full(len(src), 2, np.int32)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5, **kw)
+    return from_edges(cfg, src, dst, w), cfg
+
+
+def test_valid_lanes_checks_global_range():
+    _, cfg = _state()
+    u = jnp.array([0, -1, 7, 8, 3], jnp.int32)
+    v = jnp.array([1, 1, -2, 0, 8], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(valid_lanes(cfg, u, v)),
+        [True, False, False, False, False])
+
+
+def test_classifier_taxonomy():
+    """One round exercising every reason code, against known rows."""
+    st, cfg = _state()
+    classify = make_classifier(cfg)
+    ins = jnp.array([1, 1, 1, 1, 1, 0, 0, 0], bool)
+    u = jnp.array([0, 0, -1, 2, 3, 1, 0, 1], jnp.int32)
+    v = jnp.array([4, 5, 2, 8, 1, 5, 2, 0], jnp.int32)
+    w = jnp.array([2, 2, 1, 1, 0, 1, 1, 1], jnp.int32)
+    reasons = np.asarray(classify(st, ins, u, v, w))
+    np.testing.assert_array_equal(reasons, [
+        R_OK,          # insert (0,4): deg 3 < C
+        R_CAPACITY,    # insert (0,5): second insert on v0 would be slot 4
+        R_VERTEX,      # u = -1
+        R_VERTEX,      # v = 8 >= V
+        R_WEIGHT,      # int bias 0 on an insert lane
+        R_ABSENT,      # delete (1,5): v1's only neighbor is 0
+        R_OK,          # delete (0,2): present
+        R_OK,          # delete (1,0): present
+    ])
+
+
+def test_classifier_ok_lanes_always_apply():
+    """Post-guard the engine-level reject counters are zero by
+    construction: apply with active = (reasons == R_OK)."""
+    st, cfg = _state()
+    classify = make_classifier(cfg)
+    upd = make_updater(cfg, with_active=True)
+    ins = jnp.array([1, 1, 1, 0, 0, 0], bool)
+    u = jnp.array([0, 0, 6, 1, 1, 0], jnp.int32)      # cap overflow on 0/6
+    v = jnp.array([4, 5, 7, 0, 0, 7], jnp.int32)      # dup delete (1,0)
+    w = jnp.array([2, 2, 2, 1, 1, 1], jnp.int32)
+    reasons = classify(st, ins, u, v, w)
+    st2, stats = upd(st, ins, u, v, w, reasons == R_OK)
+    assert int(stats.rejected.sum()) == 0
+    n_ok = int(np.sum(np.asarray(reasons) == R_OK))
+    assert int(stats.ins_applied + stats.del_applied) == n_ok
+
+
+def test_classifier_duplicate_policy():
+    """R_DUP is opt-in (BINGO is a multigraph engine): default policy
+    admits duplicates, reject_duplicates flags in-state and in-round."""
+    st, cfg = _state()
+    ins = jnp.ones((4,), bool)
+    u = jnp.array([0, 2, 2, 3], jnp.int32)
+    v = jnp.array([1, 6, 6, 4], jnp.int32)   # (0,1) in state; (2,6) twice
+    w = jnp.full((4,), 2, jnp.int32)
+    default = np.asarray(make_classifier(cfg)(st, ins, u, v, w))
+    np.testing.assert_array_equal(default, [R_OK] * 4)
+    strict = np.asarray(make_classifier(
+        cfg, GuardPolicy(reject_duplicates=True))(st, ins, u, v, w))
+    np.testing.assert_array_equal(strict, [R_DUP, R_OK, R_DUP, R_OK])
+
+
+def test_classifier_delete_of_same_round_insert_is_ok():
+    """§5.2 staging: inserts land before deletes, so deleting an edge
+    inserted in the same round classifies OK."""
+    st, cfg = _state()
+    ins = jnp.array([True, False])
+    u = jnp.array([3, 3], jnp.int32)
+    v = jnp.array([5, 5], jnp.int32)
+    w = jnp.array([2, 1], jnp.int32)
+    reasons = np.asarray(make_classifier(cfg)(st, ins, u, v, w))
+    np.testing.assert_array_equal(reasons, [R_OK, R_OK])
+
+
+def test_guarded_engine_bit_exact_on_clean_stream():
+    """On a valid stream the guard is a pure observer: states, stats
+    and served paths are bit-identical to the unguarded engine."""
+    V, C = 16, 8
+    src, dst, w = random_graph(V, C, max_bias=31, seed=4)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5)
+    stream = make_update_stream(src, dst, w, batch_size=4, rounds=3,
+                                seed=1, num_vertices=V)
+    params = WalkParams(kind="deepwalk", length=6)
+    starts = jnp.arange(8, dtype=jnp.int32) % V
+
+    def run(guard):
+        eng = DynamicWalkEngine(
+            from_edges(cfg, stream.init_src, stream.init_dst,
+                       stream.init_w), cfg, params, guard=guard, seed=0)
+        out = []
+        for r in range(3):
+            stats = eng.ingest(jnp.asarray(stream.is_insert[r]),
+                               jnp.asarray(stream.u[r]),
+                               jnp.asarray(stream.v[r]),
+                               jnp.asarray(stream.w[r]))
+            out.append((stats, eng.walk(starts)))
+        return eng, out
+
+    e0, out0 = run(guard=None)
+    e1, out1 = run(guard=True)
+    for (s0, p0), (s1, p1) in zip(out0, out1):
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(s0.rejected),
+                                      np.asarray(s1.rejected))
+        assert int(s1.rejected.sum()) == 0
+    for a, b in zip(jax.tree.leaves(e0.state), jax.tree.leaves(e1.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    e1.guard.check_conservation()
+    assert not e1.guard.quarantine and not e1.guard.pending
+
+
+def test_conservation_every_round_on_dirty_stream():
+    """accepted + quarantined + pending == ingested after EVERY round."""
+    st, cfg = _state(V=8, C=4)
+    eng = DynamicWalkEngine(st, cfg, guard=True)
+    rng = np.random.default_rng(0)
+    for r in range(6):
+        B = 8
+        ins = rng.random(B) < 0.7
+        u = rng.integers(-2, cfg.num_vertices + 2, B).astype(np.int32)
+        v = rng.integers(-2, cfg.num_vertices + 2, B).astype(np.int32)
+        w = rng.integers(0, 5, B).astype(np.int32)
+        before = eng.guard.accepted
+        stats = eng.ingest(jnp.asarray(ins), jnp.asarray(u),
+                           jnp.asarray(v), jnp.asarray(w))
+        eng.guard.check_conservation()
+        # every lane is either accepted or carried in the reject tally
+        # (retries can only ADD accepted lanes on top of the round's)
+        accepted_now = eng.guard.accepted - before
+        assert accepted_now + int(stats.rejected.sum()) >= B
+    g = eng.guard
+    assert g.ingested == 6 * 8
+    assert g.quarantined == len(g.quarantine)
+    assert g.quarantined > 0                 # the dirt actually landed
+    assert all(eng.audit()[k] == 0 for k in eng.audit())
+
+
+def test_capacity_spill_and_retry_after_delete():
+    """Overflowed inserts wait in the pending queue and apply after a
+    round whose deletes freed a slot."""
+    st, cfg = _state(V=8, C=4)           # v6 full
+    eng = DynamicWalkEngine(st, cfg, guard=True)
+    stats = eng.ingest(jnp.array([True]), jnp.array([6], jnp.int32),
+                       jnp.array([7], jnp.int32), jnp.array([3], jnp.int32))
+    g = eng.guard
+    assert len(g.pending) == 1 and g.pending[0].u == 6
+    assert int(stats.rejected[R_CAPACITY]) == 1
+    g.check_conservation()
+
+    # a round with an applied delete frees a slot -> in-round retry
+    stats = eng.ingest(jnp.array([False]), jnp.array([6], jnp.int32),
+                       jnp.array([2], jnp.int32), jnp.array([1], jnp.int32))
+    assert not g.pending
+    assert g.retried == 1
+    g.check_conservation()
+    row = np.asarray(eng.state.nbr[6])
+    deg = int(eng.state.deg[6])
+    assert 7 in row[:deg].tolist()
+
+
+def test_retry_budget_exhaustion_quarantines():
+    """An edge whose vertex never frees up exhausts max_retries and is
+    quarantined with R_CAPACITY — never silently dropped."""
+    st, cfg = _state(V=8, C=4)
+    eng = DynamicWalkEngine(st, cfg, guard=GuardPolicy(max_retries=1))
+    eng.ingest(jnp.array([True]), jnp.array([6], jnp.int32),
+               jnp.array([7], jnp.int32), jnp.array([3], jnp.int32))
+    g = eng.guard
+    assert len(g.pending) == 1
+    # delete on ANOTHER vertex: frees nothing on v6, but triggers retry
+    eng.ingest(jnp.array([False]), jnp.array([0], jnp.int32),
+               jnp.array([1], jnp.int32), jnp.array([1], jnp.int32))
+    assert not g.pending
+    assert g.quarantine and g.quarantine[-1].reason == R_CAPACITY
+    assert g.quarantine[-1].u == 6 and g.quarantine[-1].v == 7
+    g.check_conservation()
+
+
+def test_max_retries_zero_quarantines_overflow_directly():
+    st, cfg = _state(V=8, C=4)
+    eng = DynamicWalkEngine(st, cfg, guard=GuardPolicy(max_retries=0))
+    eng.ingest(jnp.array([True]), jnp.array([6], jnp.int32),
+               jnp.array([7], jnp.int32), jnp.array([3], jnp.int32))
+    g = eng.guard
+    assert not g.pending and g.quarantined == 1
+    assert g.quarantine[0].reason == R_CAPACITY
+    g.check_conservation()
+
+
+# -- stream input validation (graph/streams.py) ---------------------------
+
+def test_validate_edges_flags_bad_inputs():
+    src = np.array([0, -1, 2, 3], np.int32)
+    dst = np.array([1, 2, 9, 0], np.int32)
+    w = np.array([1.0, 2.0, 3.0, np.nan], np.float32)
+    ok, reasons = validate_edges(src, dst, w, num_vertices=8)
+    np.testing.assert_array_equal(ok, [True, False, False, False])
+    assert len(reasons) == 2      # endpoint reason + weight reason
+
+
+def test_make_update_stream_raises_on_invalid():
+    src, dst, w = random_graph(16, 8, seed=2)
+    w = w.astype(np.float32)
+    w[3] = np.inf
+    with pytest.raises(ValueError, match="invalid weight"):
+        make_update_stream(src, dst, w, batch_size=4, rounds=2,
+                           num_vertices=16)
+    src2 = src.copy()
+    src2[0] = -7
+    with pytest.raises(ValueError, match="out-of-range"):
+        make_update_stream(src2, dst, np.ones(len(dst), np.int32),
+                           batch_size=4, rounds=2, num_vertices=16)
+
+
+def test_make_update_stream_drop_mode_quarantines_host_side():
+    src, dst, w = random_graph(16, 8, seed=2)
+    src = src.copy()
+    src[:3] = 99                                   # out of range
+    stream = make_update_stream(src, dst, w, batch_size=4, rounds=2,
+                                num_vertices=16, on_invalid="drop")
+    assert (stream.init_src < 16).all()
+    assert (stream.u < 16).all() and (stream.v < 16).all()

@@ -1,0 +1,115 @@
+"""Structured invariant checking (DESIGN.md §11, ``core/invariants``).
+
+``check_state`` returns a structured ``Violation`` report (and raises a
+readable AssertionError in ``assert_ok`` mode); ``check_state_device``
+counts violating vertices per rule on-device — the serving loop's cheap
+health probe (``DynamicWalkEngine.audit``).  Each corruption below must
+be named by BOTH checkers under the right rule, and a healthy state
+must be all-clear everywhere.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dyngraph import DENSE, EMPTY, BingoConfig, from_edges
+from repro.core.invariants import (DEVICE_RULES, Violation, check_state,
+                                   check_state_device)
+from repro.serve.dynwalk import DynamicWalkEngine
+from tests.conftest import random_graph
+
+
+def _state(V=16, C=8, seed=6, **kw):
+    src, dst, w = random_graph(V, C, max_bias=31, seed=seed)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5, **kw)
+    return from_edges(cfg, src, dst, w), cfg
+
+
+def _device_counts(st, cfg):
+    return dict(zip(DEVICE_RULES,
+                    np.asarray(check_state_device(st, cfg)).tolist()))
+
+
+def test_clean_state_all_clear():
+    st, cfg = _state()
+    assert check_state(st, cfg) == []                 # assert_ok no-raise
+    assert all(v == 0 for v in _device_counts(st, cfg).values())
+
+
+def test_engine_audit_surfaces_device_counts():
+    st, cfg = _state()
+    eng = DynamicWalkEngine(st, cfg)
+    audit = eng.audit()
+    assert set(audit) == set(DEVICE_RULES)
+    assert all(v == 0 for v in audit.values())
+
+
+@pytest.mark.parametrize("corrupt,rule", [
+    (lambda st, cfg: st._replace(
+        deg=st.deg.at[0].set(cfg.capacity + 5)), "deg_range"),
+    (lambda st, cfg: st._replace(nbr=st.nbr.at[0, 0].set(-1)), "live_nbr"),
+    (lambda st, cfg: st._replace(
+        nbr=st.nbr.at[1, cfg.capacity - 1].set(3)), "stale_tail"),
+    (lambda st, cfg: st._replace(bias=st.bias.at[0, 0].set(0)),
+     "bias_positive"),
+    (lambda st, cfg: st._replace(
+        digitsum=st.digitsum.at[0, 0].add(1)), "digitsum"),
+    (lambda st, cfg: st._replace(gsize=st.gsize.at[0, 0].add(1)), "gsize"),
+    (lambda st, cfg: st._replace(
+        wdec=st.wdec.at[0].set(1.0)), "wdec"),
+], ids=["deg_range", "live_nbr", "stale_tail", "bias_positive",
+        "digitsum", "gsize", "wdec"])
+def test_corruption_named_by_both_checkers(corrupt, rule):
+    st, cfg = _state()
+    assert int(st.deg[0]) > 0 and int(st.deg[1]) < cfg.capacity
+    bad = corrupt(st, cfg)
+    # device: the rule's violating-vertex count goes positive
+    assert _device_counts(bad, cfg)[rule] > 0
+    # host: a structured Violation names the same rule...
+    report = check_state(bad, cfg, assert_ok=False)
+    assert any(v.rule == rule for v in report)
+    assert all(isinstance(v, Violation) for v in report)
+    # ...and assert_ok mode raises, naming the rule in the message
+    with pytest.raises(AssertionError, match=rule):
+        check_state(bad, cfg)
+
+
+def test_gtype_mismatch_flagged():
+    st, cfg = _state()
+    gt = np.asarray(st.gtype)
+    u, k = np.argwhere(gt != EMPTY)[0]
+    bad = st._replace(gtype=st.gtype.at[u, k].set(EMPTY))
+    assert _device_counts(bad, cfg)["gtype"] > 0
+    report = check_state(bad, cfg, assert_ok=False)
+    assert any(v.rule == "gtype" and v.vertex == u and v.digit == k
+               for v in report)
+
+
+def test_host_only_group_membership_rule():
+    """gmem corruption is host-only territory (the O(V·C·K) sweep the
+    device subset deliberately skips) — still a structured finding."""
+    st, cfg = _state()
+    gt = np.asarray(st.gtype)
+    gs = np.asarray(st.gsize)
+    cand = np.argwhere((gt != EMPTY) & (gt != DENSE) & (gs > 0))
+    assert len(cand), "fixture has no materialized group"
+    u, k = cand[0]
+    dead_slot = int(st.deg[u])                  # never a live member
+    bad = st._replace(gmem=st.gmem.at[u, k, 0].set(dead_slot))
+    report = check_state(bad, cfg, assert_ok=False)
+    assert any(v.rule.startswith("gmem") and v.vertex == u
+               for v in report)
+    # the device subset stays silent on it, by design
+    host_only = _device_counts(bad, cfg)
+    assert all(v == 0 for v in host_only.values())
+
+
+def test_report_is_selective():
+    """Corrupting one vertex must not implicate the others."""
+    st, cfg = _state()
+    bad = st._replace(digitsum=st.digitsum.at[2, 0].add(3))
+    report = check_state(bad, cfg, assert_ok=False)
+    assert {v.vertex for v in report} == {2}
+    # vertices= restricts the sweep
+    assert check_state(bad, cfg, vertices=[0, 1], assert_ok=False) == []

@@ -1,0 +1,200 @@
+"""Crash-exact checkpoint/WAL recovery (DESIGN.md §11).
+
+The pin: kill a serving engine at an arbitrary point, restore from the
+newest snapshot + WAL replay, and the recovered engine is *bit-identical*
+to an uninterrupted twin — state tables, PRNG key, serving counters,
+guard quarantine/pending bookkeeping, and every path served afterwards —
+at 1 shard and (with 8 fake host devices) 8 shards.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.walks import WalkParams
+from repro.serve.dynwalk import DynamicWalkEngine
+from repro.serve.recovery import RecoverableEngine, WriteAheadLog
+from tests.conftest import random_graph
+
+DEVS = len(jax.devices())
+multi = pytest.mark.skipif(
+    DEVS < 8, reason="needs 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+V, C = 16, 8
+PARAMS = WalkParams(kind="deepwalk", length=6)
+STARTS = jnp.arange(8, dtype=jnp.int32) % V
+
+
+def _fresh_state():
+    src, dst, w = random_graph(V, C, max_bias=31, seed=5)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5)
+    return from_edges(cfg, src, dst, w), cfg
+
+
+def _dirty_rounds(n_rounds=4, B=6, seed=2):
+    """Mixed rounds with deliberate dirt so the guard state is live."""
+    rng = np.random.default_rng(seed)
+    rounds = []
+    for _ in range(n_rounds):
+        ins = rng.random(B) < 0.7
+        u = rng.integers(0, V, B).astype(np.int32)
+        v = rng.integers(0, V, B).astype(np.int32)
+        w = rng.integers(1, 16, B).astype(np.int32)
+        u[0] = -1                      # quarantined every round
+        rounds.append((ins, u, v, w))
+    return rounds
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_engines_identical(e0, e1):
+    _assert_trees_equal(e0.state, e1.state)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(e0._key)),
+        np.asarray(jax.random.key_data(e1._key)))
+    assert (e0.rounds_ingested, e0.updates_applied, e0.walks_served) == \
+        (e1.rounds_ingested, e1.updates_applied, e1.walks_served)
+    if e0.guard is not None:
+        assert e0.guard.snapshot() == e1.guard.snapshot()
+
+
+# -- the WAL itself -------------------------------------------------------
+
+def test_wal_append_replay_roundtrip(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append_round(np.array([True]), np.array([1]), np.array([2]),
+                     np.array([3]))
+    wal.append_walks(1, 8)
+    wal.append_round(np.array([False]), np.array([4]), np.array([5]),
+                     np.array([1]))
+    recs = list(wal.replay())
+    assert [(s, k) for s, k, _ in recs] == \
+        [(0, "round"), (1, "walks"), (2, "round")]
+    assert int(recs[1][2]["served"]) == 8
+    np.testing.assert_array_equal(recs[2][2]["u"], [4])
+    # replay from a generation skips folded records
+    assert [s for s, _, _ in wal.replay(from_seq=2)] == [2]
+
+
+def test_wal_reopen_continues_and_ignores_torn_writes(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append_walks(1, 4)
+    wal.append_walks(1, 4)
+    # a torn write leaves only a .tmp file — never a committed record
+    open(os.path.join(str(tmp_path), "0000000002.npz.tmp-999"),
+         "wb").write(b"garbage")
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.next_seq == 2
+    assert [s for s, _, _ in wal2.replay()] == [0, 1]
+
+
+# -- crash-exact restore --------------------------------------------------
+
+def _uninterrupted(rounds):
+    st, cfg = _fresh_state()
+    eng = DynamicWalkEngine(st, cfg, PARAMS, guard=True, seed=0)
+    paths = []
+    for ins, u, v, w in rounds:
+        eng.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                   jnp.asarray(w))
+        paths.append(np.asarray(eng.walk(STARTS)))
+    return eng, paths
+
+
+def test_crash_replay_bit_identical_single_shard(tmp_path):
+    rounds = _dirty_rounds()
+    ref, ref_paths = _uninterrupted(rounds)
+
+    # the run that will "crash": same inputs through the WAL wrapper,
+    # snapshotting every 2 rounds, then the object is abandoned.
+    st, cfg = _fresh_state()
+    rec = RecoverableEngine(
+        DynamicWalkEngine(st, cfg, PARAMS, guard=True, seed=0),
+        ckpt_dir=str(tmp_path), checkpoint_every=2)
+    live_paths = []
+    for ins, u, v, w in rounds:
+        rec.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                   jnp.asarray(w))
+        live_paths.append(np.asarray(rec.walk(STARTS)))
+    rec.wait()
+    for a, b in zip(ref_paths, live_paths):
+        np.testing.assert_array_equal(a, b)
+    del rec                                            # crash
+
+    rec2 = RecoverableEngine.restore(str(tmp_path), cfg, PARAMS,
+                                     guard=True)
+    _assert_engines_identical(ref, rec2.engine)
+
+    # and the NEXT served batch + round is still bit-identical
+    extra = _dirty_rounds(n_rounds=1, seed=9)[0]
+    for e in (ref, rec2):
+        e.ingest(*(jnp.asarray(x) for x in extra))
+    np.testing.assert_array_equal(np.asarray(ref.walk(STARTS)),
+                                  np.asarray(rec2.walk(STARTS)))
+    _assert_engines_identical(ref, rec2.engine)
+
+
+def test_restore_replays_past_stale_snapshot(tmp_path):
+    """With checkpoint_every=0 only the construction-time generation-0
+    snapshot exists: restore must replay the ENTIRE WAL."""
+    rounds = _dirty_rounds(n_rounds=3, seed=7)
+    ref, _ = _uninterrupted(rounds)
+    st, cfg = _fresh_state()
+    rec = RecoverableEngine(
+        DynamicWalkEngine(st, cfg, PARAMS, guard=True, seed=0),
+        ckpt_dir=str(tmp_path))
+    for ins, u, v, w in rounds:
+        rec.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                   jnp.asarray(w))
+        rec.walk(STARTS)
+    rec.wait()
+    del rec
+    rec2 = RecoverableEngine.restore(str(tmp_path), cfg, PARAMS,
+                                     guard=True)
+    _assert_engines_identical(ref, rec2.engine)
+
+
+@multi
+def test_crash_replay_bit_identical_8_shards(tmp_path):
+    """The same crash-exactness pin over the vertex-sharded engine."""
+    mesh = jax.make_mesh((8,), ("data",))
+    rounds = _dirty_rounds(n_rounds=2, seed=3)
+
+    def build():
+        st, cfg = _fresh_state()
+        return DynamicWalkEngine(st, cfg, PARAMS, guard=True, seed=0,
+                                 mesh=mesh), cfg
+
+    ref, cfg = build()
+    ref_paths = []
+    for ins, u, v, w in rounds:
+        ref.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                   jnp.asarray(w))
+        ref_paths.append(np.asarray(ref.walk(STARTS)))
+
+    eng, _ = build()
+    rec = RecoverableEngine(eng, ckpt_dir=str(tmp_path),
+                            checkpoint_every=1)
+    for ins, u, v, w in rounds:
+        rec.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                   jnp.asarray(w))
+        rec.walk(STARTS)
+    rec.wait()
+    del rec
+
+    rec2 = RecoverableEngine.restore(str(tmp_path), cfg, PARAMS,
+                                     guard=True, mesh=mesh)
+    _assert_engines_identical(ref, rec2.engine)
+    np.testing.assert_array_equal(np.asarray(ref.walk(STARTS)),
+                                  np.asarray(rec2.walk(STARTS)))
