@@ -1,0 +1,206 @@
+"""Mixed-stream serving: continuous scheduler vs serial engine calls.
+
+Open-loop benchmark of the PR-8 serving story (DESIGN.md §12): one
+pre-generated request stream — walk queries of jittered size interleaved
+with small update batches — is driven twice through the SAME engine
+configuration:
+
+  ``serial``     — the pre-scheduler serving loop: every request is an
+                   individual blocking engine call (per-request
+                   ``np.asarray`` harvest, per-batch ingest round; the
+                   guarded row adds the per-round host sync this PR's
+                   deferred accounting removes).
+  ``scheduler``  — ``ServingScheduler``: walk queries continuously
+                   batched into fixed-lane cohorts, updates coalesced
+                   into deadline-bounded windows, results harvested
+                   lazily off the async dispatch stream.
+
+Rows record sustained walks/s (start vertices served per wall second,
+REAL lanes — padding never counts); p50/p99 per-request walk latency,
+updates/s and steps/s ride along as ``extras`` in BENCH_serving.json.
+Both sides are shape-warmed off the clock so the comparison times the
+serving policy, not XLA compiles.  Case tags: ``{side}/guard={on,off}``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import record, record_sizing
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.walks import WalkParams
+from repro.graph.rmat import degree_bias, rmat_edges
+from repro.graph.streams import make_update_stream
+from repro.serve.dynwalk import DynamicWalkEngine
+from repro.serve.scheduler import SchedulerConfig, ServingScheduler
+
+BENCH = "serving"
+
+
+def _sizing():
+    # Sizing couplings that decide whether the comparison is honest:
+    # the bucket ladder must stay geometric-ish (a (64, 256) ladder
+    # pads a 70-lane cohort 3.7x and hands the comparison to the
+    # serial side on padding waste alone), and ``update_lanes`` must
+    # match the arrival rate x ``max_update_delay`` — a window sized
+    # far above what the deadline lets accumulate ships mostly padding
+    # and multiplies the update work per real lane.
+    if common.MICRO:
+        return dict(scale=8, capacity=16, length=8, events=60,
+                    update_batch=8, max_req=24, buckets=(32, 64, 128),
+                    update_lanes=16)
+    return dict(scale=11, capacity=64, length=16, events=400,
+                update_batch=16, max_req=48, buckets=(64, 128, 256),
+                update_lanes=64)
+
+
+def _build(sz, guard):
+    V = 1 << sz["scale"]
+    src, dst = rmat_edges(sz["scale"], 8, seed=0)
+    w = degree_bias(src, dst, V, bias_bits=12)
+    cfg = BingoConfig(num_vertices=V, capacity=sz["capacity"],
+                      bias_bits=12, backend="reference")
+    n_upd = max(2, sz["events"] // 3)
+    stream = make_update_stream(src, dst, w,
+                                batch_size=sz["update_batch"],
+                                rounds=n_upd, seed=1, num_vertices=V)
+    st = from_edges(cfg, stream.init_src, stream.init_dst, stream.init_w)
+    eng = DynamicWalkEngine(st, cfg,
+                            WalkParams(kind="deepwalk",
+                                       length=sz["length"]),
+                            seed=0, guard=guard,
+                            walk_buckets=sz["buckets"])
+    return eng, stream, V
+
+
+def _events(sz, stream, V):
+    """The open-loop arrival sequence both sides replay verbatim.
+
+    Grouped into per-tick bursts of 1-3 requests — open loop means
+    arrivals outpace a single scheduling quantum, which is exactly the
+    regime continuous batching exists for.  The serial side flattens
+    the bursts (it has no quantum: every request is one blocking
+    call); the scheduler admits each burst, then runs one tick.
+    """
+    rng = np.random.default_rng(7)
+    bursts, upd_next, left = [], 0, sz["events"]
+    while left > 0:
+        burst = []
+        for _ in range(min(left, int(rng.integers(1, 4)))):
+            if upd_next < stream.is_insert.shape[0] \
+                    and rng.random() < 1 / 3:
+                burst.append(("update", upd_next))
+                upd_next += 1
+            else:
+                n = int(rng.integers(1, sz["max_req"] + 1))
+                burst.append(("walk",
+                              rng.integers(0, V, n).astype(np.int32)))
+        left -= len(burst)
+        bursts.append(burst)
+    return bursts
+
+
+def _warm(eng, sz, stream):
+    """Compile every shape either side will hit, off the clock.  The
+    warm requests mutate the engine, but identically for every compared
+    case (same rounds, same keys), so the timed stream still compares
+    like against like."""
+    for b in sz["buckets"]:
+        np.asarray(eng.walk(jnp.zeros((b,), jnp.int32)))
+    r0 = (jnp.asarray(stream.is_insert[0]), jnp.asarray(stream.u[0]),
+          jnp.asarray(stream.v[0]), jnp.asarray(stream.w[0]))
+    eng.ingest(*r0)                                  # serial batch shape
+    lanes = sz["update_lanes"]
+    eng.ingest(jnp.ones((lanes,), bool), jnp.zeros((lanes,), jnp.int32),
+               jnp.zeros((lanes,), jnp.int32),
+               jnp.ones((lanes,), jnp.int32),
+               n_valid=0)                            # coalesced window
+    eng.walks_served = 0
+
+
+def _measure(elapsed, walk_lanes, upd_lanes, lat_s, length):
+    lat = np.asarray(lat_s) * 1e3
+    return {"walks_per_s": walk_lanes / max(elapsed, 1e-9),
+            "steps_per_s": walk_lanes * length / max(elapsed, 1e-9),
+            "updates_per_s": upd_lanes / max(elapsed, 1e-9),
+            "p50_walk_ms": float(np.percentile(lat, 50)),
+            "p99_walk_ms": float(np.percentile(lat, 99))}
+
+
+def _run_serial(sz, guard, events):
+    eng, stream, V = _build(sz, guard)
+    _warm(eng, sz, stream)
+    lat, walk_lanes, upd_lanes = [], 0, 0
+    t0 = time.perf_counter()
+    for kind, payload in (ev for burst in events for ev in burst):
+        if kind == "update":
+            r = payload
+            stats = eng.ingest(jnp.asarray(stream.is_insert[r]),
+                               jnp.asarray(stream.u[r]),
+                               jnp.asarray(stream.v[r]),
+                               jnp.asarray(stream.w[r]))
+            jax.block_until_ready(stats)
+            upd_lanes += stream.is_insert.shape[1]
+        else:
+            t1 = time.perf_counter()
+            np.asarray(eng.walk(jnp.asarray(payload)))
+            lat.append(time.perf_counter() - t1)
+            walk_lanes += len(payload)
+    elapsed = time.perf_counter() - t0
+    assert int(eng.walks_served) == walk_lanes
+    return _measure(elapsed, walk_lanes, upd_lanes, lat, sz["length"])
+
+
+def _run_scheduler(sz, guard, events):
+    eng, stream, V = _build(sz, guard)
+    _warm(eng, sz, stream)
+    sched = ServingScheduler(eng, SchedulerConfig(
+        update_lanes=sz["update_lanes"], max_update_delay=4,
+        max_walk_queue=1 << 30, max_update_queue=1 << 30))
+    walk_lanes, upd_lanes, done = 0, 0, []
+    t0 = time.perf_counter()
+    for burst in events:
+        for kind, payload in burst:
+            if kind == "update":
+                r = payload
+                assert sched.submit_update(
+                    stream.is_insert[r], stream.u[r], stream.v[r],
+                    stream.w[r])
+                upd_lanes += stream.is_insert.shape[1]
+            else:
+                assert sched.submit_walk(payload) is not None
+                walk_lanes += len(payload)
+        sched.tick()
+        done.extend(sched.poll())
+    done.extend(sched.drain())
+    elapsed = time.perf_counter() - t0
+    sched.check_conservation()
+    assert int(eng.walks_served) == walk_lanes
+    assert len(done) == sum(1 for b in events for k, _ in b
+                            if k == "walk")
+    return _measure(elapsed, walk_lanes, upd_lanes,
+                    [w.latency_s for w in done], sz["length"])
+
+
+REPS = 2   # best sustained rep wins: one timer-noise spike on this
+           # shared 1-core container otherwise decides the comparison
+
+
+def main() -> None:
+    sz = _sizing()
+    record_sizing(BENCH, **sz, guard_modes=["off", "on"], reps=REPS)
+    _, stream, V = _build(sz, None)
+    events = _events(sz, stream, V)
+    for guard, tag in ((None, "guard=off"), (True, "guard=on")):
+        for side, run in (("serial", _run_serial),
+                          ("scheduler", _run_scheduler)):
+            best = max((run(sz, guard, events) for _ in range(REPS)),
+                       key=lambda m: m["walks_per_s"])
+            for metric, value in best.items():
+                record(BENCH, f"{side}/{tag}", metric, value)

@@ -1,20 +1,28 @@
-"""CI guard: the cohort-interleaved kernel must not lose to K=1.
+"""CI guards over the committed BENCH_*.json perf pins.
 
-Reads the newest ``interpret: false`` snapshot of BENCH_walks.json and
-computes, per walk kind, ``best_{K>=2}(steps/s) / steps/s(K=1)``, then
-fails (exit 1) if the geometric mean over kinds drops below
-``--min-ratio``.
+``--mode walks`` (default): the cohort-interleaved kernel must not
+lose to K=1.  Reads the newest ``interpret: false`` snapshot of
+BENCH_walks.json and computes, per walk kind, ``best_{K>=2}(steps/s) /
+steps/s(K=1)``, then fails (exit 1) if the geometric mean over kinds
+drops below ``--min-ratio``.
 
-Why tolerance instead of strict ``K2 >= K1``: on the compiled-CPU path
-(the only compiled path CI has) the K rows all time the jnp megawalk
-oracle — the same XLA program, because the oracle is cohort-invariant
-by construction — so their spread is pure timing noise.  The guard's
-job there is to catch wiring rot (missing K rows, a snapshot that
-stopped being compiled, a pathological slowdown), not to referee noise;
-on TPU the same guard with the same threshold genuinely compares three
-Mosaic kernels and catches an interleaving regression.
+``--mode serving``: the continuous scheduler must not lose to the
+serial engine loop (DESIGN.md §12).  Reads the newest compiled
+snapshot of BENCH_serving.json and computes, per guard mode,
+``scheduler walks/s / serial walks/s``; same geomean threshold.
 
-  python -m benchmarks.guard [--walks BENCH_walks.json] [--min-ratio 0.8]
+Why tolerance instead of strict ``>=``: on the compiled-CPU path (the
+only compiled path CI has) the compared rows often time near-identical
+XLA programs — walks' K rows all run the cohort-invariant jnp oracle —
+so their spread is pure timing noise.  The guard's job there is to
+catch wiring rot (missing rows, a snapshot that stopped being
+compiled, a pathological slowdown), not to referee noise; on TPU the
+same gates referee the real kernels.
+
+  python -m benchmarks.guard [--mode walks|serving]
+                             [--walks BENCH_walks.json]
+                             [--serving BENCH_serving.json]
+                             [--min-ratio 0.8]
 """
 
 from __future__ import annotations
@@ -41,28 +49,53 @@ def cohort_ratios(snap: dict) -> dict:
     return out
 
 
+def serving_ratios(snap: dict) -> dict:
+    """guard-mode -> scheduler/serial walks-per-s ratio."""
+    sides: dict = {}
+    for case, v in snap.get("cases", {}).items():
+        m = re.match(r"(scheduler|serial)/guard=(on|off)$", case)
+        if m:
+            sides.setdefault(m.group(2), {})[m.group(1)] = float(v)
+    return {f"guard={g}": r["scheduler"] / r["serial"]
+            for g, r in sorted(sides.items())
+            if "scheduler" in r and "serial" in r}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("walks", "serving"),
+                    default="walks")
     ap.add_argument("--walks", default="BENCH_walks.json")
+    ap.add_argument("--serving", default="BENCH_serving.json")
     ap.add_argument("--min-ratio", type=float, default=0.8)
     args = ap.parse_args()
-    with open(args.walks) as f:
+    path = args.walks if args.mode == "walks" else args.serving
+    with open(path) as f:
         doc = json.load(f)
     snaps = [s for s in (doc.get("snapshots") or [doc])
              if not s.get("env", {}).get("interpret", True)]
     if not snaps:
-        print("guard: no interpret=false snapshot in", args.walks)
+        print("guard: no interpret=false snapshot in", path)
         return 1
-    ratios = cohort_ratios(snaps[-1])
+    if args.mode == "walks":
+        ratios, label, fail = (cohort_ratios(snaps[-1]), "best(K>=2)/K1",
+                               "cohort-interleaved kernel lost to K=1")
+        missing = "compiled snapshot has no K=1 + K>=2 fused rows"
+    else:
+        ratios, label, fail = (serving_ratios(snaps[-1]),
+                               "scheduler/serial walks/s",
+                               "continuous scheduler lost to the "
+                               "serial engine loop")
+        missing = "compiled snapshot has no scheduler + serial rows"
     if not ratios:
-        print("guard: compiled snapshot has no K=1 + K>=2 fused rows")
+        print(f"guard: {missing}")
         return 1
     gm = math.exp(sum(math.log(r) for r in ratios.values()) / len(ratios))
-    for kind, r in ratios.items():
-        print(f"guard: {kind}: best(K>=2)/K1 = {r:.3f}")
+    for key, r in ratios.items():
+        print(f"guard: {key}: {label} = {r:.3f}")
     print(f"guard: geomean = {gm:.3f} (min {args.min_ratio})")
     if gm < args.min_ratio:
-        print("guard: FAIL — cohort-interleaved kernel lost to K=1")
+        print(f"guard: FAIL — {fail}")
         return 1
     print("guard: ok")
     return 0

@@ -20,13 +20,15 @@ import time
 import traceback
 
 from benchmarks import (bench_batched, bench_complexity, bench_fp_bias,
-                        bench_group_adapt, bench_piecewise, bench_sweeps,
-                        bench_table3, bench_updates, bench_walks)
+                        bench_group_adapt, bench_piecewise, bench_serving,
+                        bench_sweeps, bench_table3, bench_updates,
+                        bench_walks)
 from benchmarks.common import ROWS
 
 MODULES = {
     "walks": bench_walks,            # whole-walk fused vs per-step paths
     "updates": bench_updates,        # batched updates: ref vs megakernel
+    "serving": bench_serving,        # continuous scheduler vs serial calls
     "table3": bench_table3,          # paper Table 3
     "complexity": bench_complexity,  # paper Table 1
     "group_adapt": bench_group_adapt,  # paper Fig. 11 + 13
@@ -204,6 +206,61 @@ def _dry_update_smoke() -> None:
           "(interpret mode)")
 
 
+def _dry_serving_smoke() -> None:
+    """Run the continuous scheduler once at toy scale — mixed stream,
+    guard on — and assert the §12 staleness contract end to end: the
+    overlapped output is BIT-IDENTICAL to a serial replay of the
+    recorded admission trace, and the backpressure counters conserve."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.dyngraph import BingoConfig, from_edges
+    from repro.core.walks import WalkParams
+    from repro.serve.dynwalk import DynamicWalkEngine
+    from repro.serve.scheduler import (SchedulerConfig, ServingScheduler,
+                                       WalkOp, replay_admission_trace)
+
+    V, C = 32, 8
+    rng = np.random.default_rng(0)
+    src = np.arange(V, dtype=np.int32)
+    dst = (src + 1) % V
+    w = np.full(V, 3, np.int32)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=4)
+
+    def mk():
+        return DynamicWalkEngine(
+            from_edges(cfg, src, dst, w), cfg,
+            WalkParams(kind="deepwalk", length=5), seed=3, guard=True,
+            walk_buckets=(8, 16))
+    eng = mk()
+    sched = ServingScheduler(eng, SchedulerConfig(update_lanes=4,
+                                                  max_update_delay=2))
+    for i in range(12):
+        if i % 3 == 0:
+            assert sched.submit_update(
+                np.ones(2, bool), rng.integers(0, V, 2).astype(np.int32),
+                rng.integers(0, V, 2).astype(np.int32),
+                np.full(2, 2, np.int32))
+        else:
+            assert sched.submit_walk(
+                rng.integers(0, V, int(rng.integers(1, 7)))
+                .astype(np.int32)) is not None
+        sched.tick()
+    done = {r.rid: r for r in sched.drain()}
+    sched.check_conservation()
+    replayed = iter(replay_admission_trace(mk(), sched.trace))
+    for op in sched.trace:
+        if isinstance(op, WalkOp):
+            rep = next(replayed)
+            off = np.cumsum([0] + list(op.sizes))
+            for j, rid in enumerate(op.rids):
+                assert np.array_equal(done[rid].paths,
+                                      rep[off[j]:off[j + 1]])
+    gens = [done[r].generation for r in sorted(done)]
+    assert gens == sorted(gens)
+    print(f"# dry: scheduler replay bit-identical ({len(done)} walks, "
+          f"{sched.generation} generations, guard on)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -235,6 +292,7 @@ def main() -> None:
         _dry_fused_smoke()
         _dry_update_smoke()
         _dry_relay_smoke()
+        _dry_serving_smoke()
         return
 
     print("bench,case,metric,value")
@@ -261,6 +319,8 @@ def main() -> None:
                       "walks", "steps_per_sec")
     _write_bench_json(os.path.join(REPO_ROOT, "BENCH_updates.json"),
                       "updates", "updates_per_s")
+    _write_bench_json(os.path.join(REPO_ROOT, "BENCH_serving.json"),
+                      "serving", "walks_per_s")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -17,8 +17,8 @@ from typing import Iterator, NamedTuple, Tuple
 
 import numpy as np
 
-__all__ = ["UpdateStream", "make_update_stream", "rounds_on_device",
-           "validate_edges"]
+__all__ = ["UpdateStream", "coalesce_windows", "make_update_stream",
+           "rounds_on_device", "windows_on_device", "validate_edges"]
 
 
 def validate_edges(src, dst, w, *, num_vertices=None, fp_bias=False):
@@ -145,6 +145,108 @@ def make_update_stream(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
 
     n0 = len(a_idx)
     return UpdateStream(src[a_idx], dst[a_idx], w[a_idx], ins, uu, vv, ww)
+
+
+def coalesce_windows(stream: UpdateStream, *, max_lanes: int,
+                     max_delay: int = 0) -> Iterator[Tuple]:
+    """Deadline-driven windowed coalescing (DESIGN.md §12).
+
+    Re-chunks the stream's ``(rounds, batch)`` updates into fixed-shape
+    windows of exactly ``max_lanes`` lanes, flushing early when the
+    oldest queued lane has waited more than ``max_delay`` arrival rounds
+    — the §5.2 batched-round lever driven by a latency bound instead of
+    by the caller's round size.  Yields ``(is_insert, u, v, w, n_valid)``
+    host tuples where lanes ``>= n_valid`` are padding ``(insert, 0, 0,
+    1)``; feed ``n_valid`` to ``DynamicWalkEngine.ingest`` so the padded
+    lanes are masked out while every compiled round keeps one shape.
+
+    With ``max_delay=0`` every arrival round flushes immediately
+    (latency-optimal, §5.2 throughput forfeited); with a large delay
+    every window is full (throughput-optimal).  The arrival "clock" is
+    the stream's own round index — callers with a wall clock should use
+    ``ServingScheduler`` instead, which applies the same policy to live
+    traffic.
+    """
+    if max_lanes < 1:
+        raise ValueError(f"max_lanes must be >= 1; got {max_lanes}")
+    if max_delay < 0:
+        raise ValueError(f"max_delay must be >= 0; got {max_delay}")
+    rounds = stream.is_insert.shape[0]
+    q_ins: list = []
+    q_u: list = []
+    q_v: list = []
+    q_w: list = []
+    q_tick: list = []   # arrival round of each queued lane
+    pending = 0
+
+    def flush(n):
+        nonlocal pending
+        ins = np.concatenate(q_ins)
+        u = np.concatenate(q_u)
+        v = np.concatenate(q_v)
+        w = np.concatenate(q_w)
+        out = (np.ones(max_lanes, bool),
+               np.zeros(max_lanes, np.int32),
+               np.zeros(max_lanes, np.int32),
+               np.ones(max_lanes, w.dtype))
+        out[0][:n] = ins[:n]
+        out[1][:n] = u[:n]
+        out[2][:n] = v[:n]
+        out[3][:n] = w[:n]
+        q_ins[:] = [ins[n:]]
+        q_u[:] = [u[n:]]
+        q_v[:] = [v[n:]]
+        q_w[:] = [w[n:]]
+        del q_tick[:n]
+        pending -= n
+        return out + (n,)
+
+    for r in range(rounds):
+        q_ins.append(stream.is_insert[r])
+        q_u.append(stream.u[r])
+        q_v.append(stream.v[r])
+        q_w.append(stream.w[r])
+        q_tick.extend([r] * stream.is_insert.shape[1])
+        pending += stream.is_insert.shape[1]
+        while pending >= max_lanes:
+            yield flush(max_lanes)
+        if pending and r - q_tick[0] >= max_delay:
+            yield flush(pending)
+    if pending:
+        yield flush(pending)
+
+
+def windows_on_device(stream: UpdateStream, *, max_lanes: int,
+                      max_delay: int = 0, prefetch: int = 2,
+                      device=None) -> Iterator[Tuple]:
+    """``coalesce_windows`` with async ``device_put`` prefetch.
+
+    Same contract as ``rounds_on_device`` — ``prefetch`` windows kept in
+    flight so uploads overlap the consumer's update rounds — but over
+    the deadline-coalesced fixed-shape windows.  ``n_valid`` stays a
+    host int (it feeds the engine's lane mask, not a device array).
+    """
+    import jax
+
+    it = coalesce_windows(stream, max_lanes=max_lanes, max_delay=max_delay)
+    queue: deque = deque()
+    done = False
+
+    def pull():
+        nonlocal done
+        try:
+            ins, u, v, w, n_valid = next(it)
+        except StopIteration:
+            done = True
+            return
+        queue.append(jax.device_put((ins, u, v, w), device) + (n_valid,))
+
+    while not done and len(queue) < max(1, prefetch):
+        pull()
+    while queue:
+        if not done:
+            pull()
+        yield queue.popleft()
 
 
 def rounds_on_device(stream: UpdateStream, *, prefetch: int = 2,

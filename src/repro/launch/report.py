@@ -57,7 +57,8 @@ def mem_deltas():
     return deltas
 
 
-BENCH_FILES = ("BENCH_walks.json", "BENCH_updates.json")
+BENCH_FILES = ("BENCH_walks.json", "BENCH_updates.json",
+               "BENCH_serving.json")
 
 
 def _snapshots(doc: dict) -> list:

@@ -372,4 +372,54 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
                   "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
         )
 
+    if shape_name == "serve_round":
+        from repro.core.walks import WalkParams
+        from repro.distributed.relay import make_relay
+        Bu = wcfg.update_batch
+        Bw = 65536                      # one walk-cohort bucket (div by S)
+        L = wcfg.walk_length
+        engine = get_backend(bcfg.backend)
+        wparams = WalkParams(kind="deepwalk", length=L)
+
+        # One overlapped serving round of the continuous scheduler
+        # (DESIGN.md §12): a fixed-lane walk cohort samples generation g
+        # through the exact relay (padded lanes are -1 = free slots,
+        # zero resident cost) while the padded update coalescing window
+        # builds g+1 on the donated state — ``lanes`` masks the window's
+        # padding so every round compiles to ONE shape regardless of how
+        # many updates the deadline flushed.  Inside one XLA program the
+        # scheduler's staleness contract is structural: the walk reads
+        # the pre-update tables (its gathers order before the in-place
+        # donated-buffer writes), exactly the "walks against g overlap
+        # the megakernel building g+1" picture, with no host round-trip
+        # between them.
+        walk_relay = make_relay(engine, bcfg, wparams, mesh)
+
+        def serve_round(state, is_insert, u, v, w, lanes, starts, seed):
+            paths, _rounds, _overflow = walk_relay(state, starts, seed)
+            st2, stats = engine.apply_updates(state, bcfg, is_insert, u,
+                                              v, w, active=lanes)
+            return st2, paths, stats
+
+        upd_sds = (jax.ShapeDtypeStruct((Bu,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bu,), jnp.bool_))
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                                is_leaf=lambda s: isinstance(s, P))
+        rep = NamedSharding(mesh, P())
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=serve_round,
+            args_sds=(state_sds,) + upd_sds + (
+                jax.ShapeDtypeStruct((Bw,), jnp.int32),
+                jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(state_sh, rep, rep, rep, rep, rep, rep, rep),
+            out_shardings=(state_sh, NamedSharding(mesh, P(dp)), None),
+            donate_argnums=(0,),
+            meta={"tokens": Bu + Bw * L,
+                  "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
     raise ValueError(shape_name)

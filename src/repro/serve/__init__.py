@@ -8,7 +8,10 @@ from repro.serve.dynwalk import DynamicWalkEngine
 from repro.serve.engine import DecodeEngine, ServeRequest
 from repro.serve.guard import GuardPolicy, IngestGuard
 from repro.serve.recovery import RecoverableEngine, WriteAheadLog
+from repro.serve.scheduler import (SchedulerConfig, ServingScheduler,
+                                   WalkResult, replay_admission_trace)
 
 __all__ = ["DecodeEngine", "DynamicWalkEngine", "ServeRequest",
            "GuardPolicy", "IngestGuard", "RecoverableEngine",
-           "WriteAheadLog"]
+           "WriteAheadLog", "SchedulerConfig", "ServingScheduler",
+           "WalkResult", "replay_admission_trace"]

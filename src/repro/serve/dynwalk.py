@@ -51,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dyngraph import BingoConfig, BingoState
-from repro.core.updates import R_OK, UpdateStats, make_updater
+from repro.core.updates import NUM_REASONS, R_OK, UpdateStats, make_updater
 from repro.core.walks import WalkParams, make_walker
 from repro.graph.streams import UpdateStream, rounds_on_device
 from repro.serve.guard import GuardPolicy, IngestGuard
@@ -75,18 +75,34 @@ class DynamicWalkEngine:
                  backend: Optional[str] = None,
                  whole_walk: Optional[bool] = None, seed: int = 0,
                  mesh=None, mailbox_cap: Optional[int] = None,
-                 guard=None):
+                 guard=None, walk_buckets=None, defer_guard: bool = False):
         self.cfg = cfg
         self.params = params
         self._state = state
+        self.num_shards = 1
         if mesh is None:
             self._update = make_updater(cfg, backend=backend,
                                         with_active=True)
             self._walk = make_walker(state, cfg, params, backend=backend,
                                      whole_walk=whole_walk)
         else:
+            for a in mesh.axis_names:
+                self.num_shards *= mesh.shape[a]
             self._state, self._update, self._walk = self._build_sharded(
                 state, cfg, params, backend, mesh, mailbox_cap)
+        # Fixed-lane walk cohorts (DESIGN.md §12): every walk batch is
+        # padded up to the smallest bucket >= its request count, so a
+        # request-size-jittered stream only ever compiles |buckets|
+        # walk programs.  In sharded mode the relay requires each
+        # bucket to divide over the shard count.
+        self.walk_buckets = None
+        if walk_buckets:
+            self.walk_buckets = tuple(sorted(int(b) for b in walk_buckets))
+            for b in self.walk_buckets:
+                if b < 1 or b % self.num_shards:
+                    raise ValueError(
+                        f"walk bucket {b} must be a positive multiple of "
+                        f"the shard count ({self.num_shards})")
         # guard=True -> default policy; guard=GuardPolicy(...) -> custom.
         # The classifier checks endpoints against the GLOBAL cfg — in
         # sharded mode it runs over the partitioned state as plain jnp.
@@ -95,6 +111,12 @@ class DynamicWalkEngine:
             policy = guard if isinstance(guard, GuardPolicy) \
                 else GuardPolicy()
             self.guard = IngestGuard(cfg, policy)
+        # defer_guard=True moves quarantine/retry accounting off the
+        # ingest hot path: rounds park their device-side reason vectors
+        # in a backlog and ``drain_guard()`` settles them in one host
+        # sync per coalescing window (DESIGN.md §12).
+        self.defer_guard = bool(defer_guard)
+        self._guard_backlog: list = []
         self._key = jax.random.key(seed)
         self.rounds_ingested = 0
         self.updates_applied = 0
@@ -161,7 +183,8 @@ class DynamicWalkEngine:
         return self._state
 
     # -- serving surface -----------------------------------------------------
-    def ingest(self, is_insert, u, v, w) -> UpdateStats:
+    def ingest(self, is_insert, u, v, w, *,
+               n_valid: Optional[int] = None) -> UpdateStats:
         """Apply one batched update round; returns its ``UpdateStats``.
 
         Unguarded, every lane goes straight to the update pipeline
@@ -173,39 +196,108 @@ class DynamicWalkEngine:
         engine-level tally is zero by construction after the guard).
         Pending capacity overflows are retried — one bounded batch —
         after any round whose deletes may have freed slots.
+
+        ``n_valid`` marks lanes ``>= n_valid`` as *padding*: the
+        scheduler pads coalescing windows to one compiled round shape
+        (DESIGN.md §12), and pad lanes are never applied, never
+        classified, and never accounted.
+
+        With ``defer_guard=True`` the guard's host-side bookkeeping is
+        postponed: the round's device reason vector is parked in a
+        backlog (the returned stats still carry a device-computed
+        reason tally — no host sync) and ``drain_guard()`` settles
+        quarantine/retry accounting for the whole window at once.
         """
         B = int(u.shape[0])
+        nv = B if n_valid is None else int(n_valid)
+        if not 0 <= nv <= B:
+            raise ValueError(f"n_valid {nv} outside round of {B} lanes")
+        lanes = jnp.ones((B,), bool) if nv == B else \
+            jnp.arange(B, dtype=jnp.int32) < nv
         if self.guard is None:
             self._state, stats = self._update(
-                self._state, is_insert, u, v, w, jnp.ones((B,), bool))
+                self._state, is_insert, u, v, w, lanes)
             self.rounds_ingested += 1
-            self.updates_applied += B
+            self.updates_applied += nv
             return stats
 
         g = self.guard
         rnd = self.rounds_ingested
         reasons = g.classify(self._state, is_insert, u, v, w)
         self._state, stats = self._update(
-            self._state, is_insert, u, v, w, reasons == R_OK)
-        counts = g.account(rnd, is_insert, u, v, w, np.asarray(reasons))
+            self._state, is_insert, u, v, w, lanes & (reasons == R_OK))
+        if self.defer_guard:
+            # Device-side reason tally (pad lanes masked to R_OK so
+            # they never count): dispatches async, the host never
+            # blocks — quarantine records wait in the backlog.
+            tally = jnp.bincount(
+                jnp.where(lanes, reasons, R_OK), length=NUM_REASONS
+            ).at[R_OK].set(0)
+            stats = stats._replace(
+                rejected=stats.rejected + tally.astype(jnp.int32))
+            self._guard_backlog.append(
+                (rnd, is_insert, u, v, w, reasons, stats.del_applied, nv))
+            self.rounds_ingested += 1
+            self.updates_applied += nv
+            return stats
+        counts = g.account(rnd, np.asarray(is_insert)[:nv],
+                           np.asarray(u)[:nv], np.asarray(v)[:nv],
+                           np.asarray(w)[:nv], np.asarray(reasons)[:nv])
         g.deletes_since_retry += int(stats.del_applied)
         stats = stats._replace(
             rejected=stats.rejected + jnp.asarray(counts, jnp.int32))
-        if g.want_retry():
-            entries, ru, rv, rw = g.take_retry()
-            r_ins = jnp.ones((g.policy.retry_batch,), bool)
-            ru, rv, rw = jnp.asarray(ru), jnp.asarray(rv), jnp.asarray(rw)
-            r_reasons = g.classify(self._state, r_ins, ru, rv, rw)
-            self._state, rstats = self._update(
-                self._state, r_ins, ru, rv, rw, r_reasons == R_OK)
-            applied = g.settle_retry(rnd, entries, np.asarray(r_reasons))
-            if applied:
-                stats = stats._replace(
-                    ins_applied=stats.ins_applied + rstats.ins_applied,
-                    transitions=stats.transitions + rstats.transitions)
+        rstats = self._run_guard_retry(rnd)
+        if rstats is not None:
+            stats = stats._replace(
+                ins_applied=stats.ins_applied + rstats.ins_applied,
+                transitions=stats.transitions + rstats.transitions)
         self.rounds_ingested += 1
-        self.updates_applied += B
+        self.updates_applied += nv
         return stats
+
+    def _run_guard_retry(self, rnd) -> Optional[UpdateStats]:
+        """One bounded pending-overflow retry batch, if deletes since
+        the last retry may have freed capacity.  Returns the retry
+        round's stats when lanes applied, else None."""
+        g = self.guard
+        if not g.want_retry():
+            return None
+        entries, ru, rv, rw = g.take_retry()
+        r_ins = jnp.ones((g.policy.retry_batch,), bool)
+        ru, rv, rw = jnp.asarray(ru), jnp.asarray(rv), jnp.asarray(rw)
+        r_reasons = g.classify(self._state, r_ins, ru, rv, rw)
+        self._state, rstats = self._update(
+            self._state, r_ins, ru, rv, rw, r_reasons == R_OK)
+        applied = g.settle_retry(rnd, entries, np.asarray(r_reasons))
+        return rstats if applied else None
+
+    @property
+    def guard_backlog(self) -> int:
+        """Rounds whose guard accounting awaits ``drain_guard()``."""
+        return len(self._guard_backlog)
+
+    def drain_guard(self) -> int:
+        """Settle deferred guard accounting — ONE host sync per window.
+
+        Converts every backlogged reason vector to host, routes rejects
+        to quarantine / the pending queue (``IngestGuard.account``),
+        then runs at most one bounded capacity-retry batch against the
+        *current* state (the deferred contract: retries happen at drain
+        points, not mid-window).  Returns the number of rounds settled.
+        No-op without a guard or with an empty backlog; after it,
+        ``guard.check_conservation()`` holds.
+        """
+        g = self.guard
+        if g is None or not self._guard_backlog:
+            return 0
+        backlog, self._guard_backlog = self._guard_backlog, []
+        for rnd, ins, u, v, w, reasons, dels, nv in backlog:
+            g.account(rnd, np.asarray(ins)[:nv], np.asarray(u)[:nv],
+                      np.asarray(v)[:nv], np.asarray(w)[:nv],
+                      np.asarray(reasons)[:nv])
+            g.deletes_since_retry += int(dels)
+        self._run_guard_retry(self.rounds_ingested)
+        return len(backlog)
 
     def audit(self) -> dict:
         """Device-side invariant sweep of the live state (DESIGN.md §11).
@@ -219,13 +311,61 @@ class DynamicWalkEngine:
         counts = np.asarray(check_state_device(self._state, self.cfg))
         return dict(zip(DEVICE_RULES, counts.tolist()))
 
+    def _bucket_for(self, n: int) -> int:
+        for b in self.walk_buckets:
+            if b >= n:
+                return b
+        raise ValueError(
+            f"walk batch of {n} requests exceeds the largest lane bucket "
+            f"{self.walk_buckets[-1]} — split the batch or widen "
+            f"walk_buckets")
+
     def walk(self, starts, key=None):
-        """Serve one whole-walk batch; returns ``(B, length+1)`` paths."""
+        """Serve one whole-walk batch; returns ``(B, length+1)`` paths.
+
+        With ``walk_buckets=`` the batch is padded up to the smallest
+        bucket ``>= B`` before dispatch and the result sliced back to
+        the real rows, so a stream of jittered request sizes hits a
+        fixed set of compiled walk programs (the §12 zero-recompilation
+        pin; ``walk_cache_size()`` exposes the count).  On the counter-
+        PRNG whole-walk paths (pallas megakernel, sharded relay) draws
+        are per (seed, lane, t), so real lanes' paths are bit-identical
+        to an unpadded call — pad lanes burn their own streams and are
+        dropped.  On the reference per-step scan the batch shape is
+        part of the key-split stream, so the bucket shape (not the
+        request count) determines the draws — still deterministic,
+        which is all the §12 replay contract needs.  ``walks_served``
+        counts real (unpadded) requests only.
+        """
+        starts = jnp.asarray(starts, jnp.int32)
+        n = int(starts.shape[0])
         if key is None:
             self._key, key = jax.random.split(self._key)
+        if self.walk_buckets is not None:
+            B = self._bucket_for(n)
+            if B != n:
+                # pad lanes: dead (-1) slots in relay mode (free slots,
+                # zero resident cost); vertex 0 single-device (the
+                # megakernel indexes rows by start, so starts must be
+                # in range there).
+                fill = -1 if self.num_shards > 1 else 0
+                starts = jnp.concatenate(
+                    [starts, jnp.full((B - n,), fill, jnp.int32)])
+            self._state, paths = self._walk(self._state, starts, key)
+            self.walks_served += n
+            return paths[:n] if B != n else paths
         self._state, paths = self._walk(self._state, starts, key)
-        self.walks_served += int(starts.shape[0])
+        self.walks_served += n
         return paths
+
+    def walk_cache_size(self) -> int:
+        """Compiled-program count of the walk closure (the §12
+        zero-recompilation pin reads this; -1 if the runtime does not
+        expose it)."""
+        try:
+            return int(self._walk._cache_size())
+        except Exception:
+            return -1
 
     def run_stream(self, stream: UpdateStream, starts, *,
                    coalesce: int = 1, prefetch: int = 2,
