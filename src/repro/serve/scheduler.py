@@ -134,7 +134,12 @@ class ServingScheduler:
 
     The engine must be constructed with ``walk_buckets=`` (the compiled
     cohort shapes); a guarded engine is flipped into deferred
-    accounting so ingest dispatch never syncs.  Typical loop::
+    accounting so ingest dispatch never syncs.  That flip MUTATES the
+    caller's engine for the scheduler's lifetime: direct
+    ``engine.ingest`` calls made while a scheduler is attached also
+    defer their guard bookkeeping until the next drain point — call
+    ``close()`` to flush and restore the engine's prior mode.  Typical
+    loop::
 
         sched = ServingScheduler(engine)
         ...
@@ -143,7 +148,7 @@ class ServingScheduler:
         sched.tick()                           # one scheduling quantum
         for res in sched.poll(): ...           # ready results
         ...
-        results = sched.drain()                # flush everything
+        results = sched.close()                # flush + detach engine
 
     ``sched.trace`` is the admission trace; ``replay_admission_trace``
     re-runs it serially on a fresh engine and must reproduce every
@@ -157,9 +162,11 @@ class ServingScheduler:
             raise ValueError(
                 "ServingScheduler needs an engine with walk_buckets= "
                 "(the compiled fixed-lane cohort shapes)")
+        self._prior_defer_guard = engine.defer_guard
         if engine.guard is not None:
             # per-round host syncs would serialize the streams the
-            # scheduler exists to overlap (DESIGN.md §12)
+            # scheduler exists to overlap (DESIGN.md §12); close()
+            # restores the engine's prior accounting mode
             engine.defer_guard = True
         self.engine = engine
         self.cfg = cfg
@@ -204,8 +211,23 @@ class ServingScheduler:
         return rid
 
     def submit_update(self, is_insert, u, v, w) -> bool:
-        """Admit one batch of edge updates; False = backpressure."""
+        """Admit one batch of edge updates; False = backpressure.
+
+        Weights must safe-cast to the engine's bias dtype (float32 when
+        ``cfg.fp_bias``, else int32): the coalescing window packs them
+        into a pre-typed pad buffer, so a lossy dtype (float weights on
+        an integer-bias engine) raises here, at admission, instead of
+        silently truncating at flush time.
+        """
         u = np.asarray(u, np.int32)
+        w = np.asarray(w)
+        w_dtype = np.float32 if self.engine.cfg.fp_bias else np.int32
+        if not np.can_cast(w.dtype, w_dtype, casting="same_kind"):
+            raise TypeError(
+                f"weight dtype {w.dtype} does not safe-cast to the "
+                f"engine's {np.dtype(w_dtype)} bias dtype "
+                f"(fp_bias={self.engine.cfg.fp_bias}) — cast explicitly "
+                "if truncation is intended")
         B = int(u.shape[0])
         self.updates_offered += B
         if self._update_queue_lanes + B > self.cfg.max_update_queue:
@@ -213,7 +235,7 @@ class ServingScheduler:
             return False
         self._update_queue.append(
             [np.asarray(is_insert, bool), u, np.asarray(v, np.int32),
-             np.asarray(w), 0, self.tick_count])
+             w.astype(w_dtype), 0, self.tick_count])
         self._update_queue_lanes += B
         return True
 
@@ -251,6 +273,14 @@ class ServingScheduler:
             self._harvest(block=True)
         self._drain_guard()
         out, self._completed = self._completed, []
+        return out
+
+    def close(self) -> List[WalkResult]:
+        """``drain()`` then detach: restore the ``defer_guard`` mode the
+        engine had before this scheduler flipped it, so later direct
+        ``engine.ingest`` calls account per-round again."""
+        out = self.drain()
+        self.engine.defer_guard = self._prior_defer_guard
         return out
 
     # -- bookkeeping / contract --------------------------------------------
@@ -378,7 +408,17 @@ def replay_admission_trace(engine: DynamicWalkEngine, trace) -> List[np.ndarray]
     Returns the harvested paths of every ``WalkOp`` in trace order —
     the §12 staleness contract pins these bit-identical to what the
     overlapped scheduler served for the same ops.
+
+    A guarded engine is flipped into the same deferred accounting mode
+    ``ServingScheduler`` forces on the live engine: capacity-spill
+    retries must run ONLY at the recorded ``DrainOp`` points, exactly
+    where the live schedule ran them.  In per-round mode the engine
+    would retry after every ingest with fresh deletes, mutating state
+    between the trace's ops, and the replayed paths would diverge the
+    moment a spill met a delete.
     """
+    if engine.guard is not None:
+        engine.defer_guard = True     # mirror ServingScheduler.__init__
     out: List[np.ndarray] = []
     for op in trace:
         if isinstance(op, UpdateOp):

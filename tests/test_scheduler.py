@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.updates import R_CAPACITY
 from repro.core.walks import WalkParams
 from repro.graph.streams import (UpdateStream, coalesce_windows,
                                  windows_on_device)
@@ -109,6 +110,99 @@ def test_overlapped_equals_serial_replay_sharded(guard):
     done = _mixed_traffic(sched, n=15)
     assert done and sched.generation > 0
     _assert_replay_equal(sched, done, _engine(guard, mesh=mesh))
+
+
+def test_replay_capacity_spill_retries_at_drain_points():
+    """The hard half of the guard=on replay contract: with tiny
+    capacity, inserts spill to the pending queue, a delete frees a
+    slot, and the retry runs at the scheduler's DrainOp — not
+    per-round.  A walk dispatched between the delete and the drain
+    must sample the PRE-retry state in live and replay alike; a
+    per-round replay engine would retry right after the delete round
+    and diverge exactly here."""
+    Vs, Cs = 8, 2
+    src, dst, w = random_graph(Vs, Cs, max_bias=7, seed=9)
+    cfg = BingoConfig(num_vertices=Vs, capacity=Cs, bias_bits=3)
+
+    def mk():
+        return DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg,
+                                 WalkParams(kind="deepwalk", length=6),
+                                 seed=13, guard=True, walk_buckets=(8,))
+
+    dst0 = int(dst[src == 0][0])       # vertex 0's single seed edge
+    tgt = [x for x in range(1, Vs) if x != dst0][:3]
+    eng = mk()
+    sched = ServingScheduler(eng, SchedulerConfig(update_lanes=4,
+                                                  max_update_delay=1))
+    # 3 inserts at vertex 0, one free slot: 2 lanes spill to pending
+    assert sched.submit_update(np.ones(3, bool), np.zeros(3, np.int32),
+                               np.array(tgt, np.int32),
+                               np.full(3, 2, np.int32))
+    sched.tick()                       # deadline flush -> spill round
+    # delete the seed edge: frees one slot, arms the capacity retry
+    assert sched.submit_update(np.zeros(1, bool), np.zeros(1, np.int32),
+                               np.array([dst0], np.int32),
+                               np.ones(1, np.int32))
+    sched.tick()                       # deadline flush -> delete round
+    assert sched.submit_walk(np.zeros(8, np.int32)) is not None
+    sched.tick()                       # walk BEFORE the drain point
+    done = {r.rid: r for r in sched.drain()}   # DrainOp: retry runs here
+    assert any(isinstance(op, DrainOp) for op in sched.trace)
+    assert eng.guard.retried == 1      # one freed slot, one spill applied
+    assert len(eng.guard.pending) == 1 # the other spilled again
+    assert eng.guard.reason_counts[R_CAPACITY] >= 2
+    eng.guard.check_conservation()
+    # and a walk AFTER the drain sees the retried insert in both
+    assert sched.submit_walk(np.zeros(8, np.int32)) is not None
+    sched.tick()
+    done.update({r.rid: r for r in sched.drain()})
+    sched.check_conservation()
+    fresh = mk()
+    _assert_replay_equal(sched, done, fresh)
+    assert fresh.guard.retried == eng.guard.retried
+    assert fresh.guard.quarantined == eng.guard.quarantined
+    assert len(fresh.guard.pending) == len(eng.guard.pending)
+    np.testing.assert_array_equal(fresh.guard.reason_counts,
+                                  eng.guard.reason_counts)
+
+
+def test_submit_update_rejects_lossy_weight_dtype():
+    """Float weights on an integer-bias engine fail loudly at
+    admission — the coalescing pad buffer would silently truncate
+    them at flush time otherwise."""
+    sched = ServingScheduler(_engine())
+    with pytest.raises(TypeError, match="safe-cast"):
+        sched.submit_update(np.ones(4, bool), np.zeros(4, np.int32),
+                            np.ones(4, np.int32), np.full(4, 2.5))
+    assert sched.updates_offered == 0  # nothing half-admitted
+    sched.check_conservation()
+    # integer weights of any width still admit
+    assert sched.submit_update(np.ones(4, bool), np.zeros(4, np.int32),
+                               np.ones(4, np.int32), np.full(4, 2))
+    sched.drain()
+    sched.check_conservation()
+
+
+def test_close_restores_engine_guard_mode():
+    """The constructor's defer_guard flip is scoped to the scheduler:
+    close() drains and restores per-round accounting for direct
+    engine.ingest callers."""
+    eng = _engine(guard=True)
+    assert eng.defer_guard is False
+    sched = ServingScheduler(eng)
+    assert eng.defer_guard is True
+    assert sched.submit_update(np.ones(4, bool),
+                               np.arange(4, dtype=np.int32),
+                               np.arange(4, dtype=np.int32) + 1,
+                               np.full(4, 2, np.int32))
+    sched.close()
+    assert eng.defer_guard is False and eng.guard_backlog == 0
+    eng.guard.check_conservation()
+    # direct ingest now accounts per-round again: no backlog grows
+    eng.ingest(jnp.ones(2, bool), jnp.zeros(2, jnp.int32),
+               jnp.ones(2, jnp.int32), jnp.full((2,), 2, jnp.int32))
+    assert eng.guard_backlog == 0
+    eng.guard.check_conservation()
 
 
 def test_generation_tags_monotone_and_stale():
