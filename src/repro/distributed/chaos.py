@@ -36,14 +36,17 @@ the relay recovers exactly or fails loudly, never silently truncates.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.relay import make_relay, shard_index
+# RelayIntegrityError lives in relay.py now (the strict-mode max_rounds
+# trip raises it too); re-exported here for the existing callers.
+from repro.distributed.relay import (RelayIntegrityError, make_relay,
+                                     shard_index)
 from repro.distributed.walker_exchange import (exchange_walkers,
                                                merge_into_free)
 
@@ -88,29 +91,6 @@ class ChaosReport:
     peak_slots: int         # peak per-shard slot occupancy
 
 
-class RelayIntegrityError(RuntimeError):
-    """The relay lost work (or produced malformed paths) under faults.
-
-    Carries the full ``ChaosReport`` as ``.report`` and the path-audit
-    findings as ``.problems`` — the structured diagnostic DESIGN.md §11
-    demands in place of silent truncation.
-    """
-
-    def __init__(self, report: ChaosReport,
-                 problems: Sequence[str] = ()):
-        self.report = report
-        self.problems = list(problems)
-        bits = [f"{report.lost} of {report.walkers} walker(s) lost"]
-        if report.pending_at_exit:
-            bits.append(f"{report.pending_at_exit} pending at exit "
-                        f"after {report.rounds} rounds")
-        if self.problems:
-            bits.append(f"{len(self.problems)} malformed path row(s): "
-                        + "; ".join(self.problems[:5]))
-        super().__init__("relay integrity violated: " + ", ".join(bits)
-                         + f" [{report}]")
-
-
 def _u01(x):
     """fmix32-style avalanche of int32 lanes -> uniforms in [0, 1)."""
     x = x.astype(jnp.uint32)
@@ -123,9 +103,16 @@ def _u01(x):
 
 
 def _make_chaos_exchange(sched: ChaosSchedule, shard_size: int,
-                         num_shards: int, mesh):
-    """Build the faulty ``exchange_fn`` closure for ``relay_local``."""
-    axes = tuple(mesh.axis_names)
+                         num_shards: int, mesh, walker_axes=()):
+    """Build the faulty ``exchange_fn`` closure for ``relay_local``.
+
+    On a 2D vertex × walker mesh the real exchange runs over the vertex
+    axes only (each walker group has its own transport), but the fault
+    hash keys on the full-mesh device index so every (group, shard)
+    pair draws an independent deterministic fault stream."""
+    waxes = (walker_axes,) if isinstance(walker_axes, str) \
+        else tuple(walker_axes)
+    axes = tuple(a for a in mesh.axis_names if a not in waxes)
 
     def exchange(payload, *, cap, r, channel):
         live = payload[:, 0] >= 0
@@ -180,33 +167,41 @@ def _make_chaos_exchange(sched: ChaosSchedule, shard_size: int,
 def make_chaos_relay(bk, cfg, params, mesh, sched: ChaosSchedule, *,
                      max_rounds: Optional[int] = None,
                      slot_slack: Optional[int] = None,
-                     path_cap: Optional[int] = None):
+                     path_cap: Optional[int] = None,
+                     overlap: bool = False, walker_axes=()):
     """``make_relay`` with the chaotic transport and the census on.
 
     Returns ``run(state, walkers, seed, u=None) -> (paths, rounds,
     overflow, peak_slots, finished, pending_at_exit, faults (3,))``.
-    Pass a small explicit ``max_rounds`` for kill-round schedules — the
-    conservative default bound makes a dead transport take a long time
-    to give up.
+    Pass a small explicit ``max_rounds`` for kill-round schedules —
+    even the tight default bound makes a dead transport take a while to
+    give up.  ``overlap``/``walker_axes`` select the overlapped round
+    schedule and the 2D vertex × walker mesh — the chaos contract is
+    schedule- and mesh-independent, and the tests pin exactly that.
     """
     ex = _make_chaos_exchange(
-        sched, _shard_size(cfg, mesh), _num_shards(mesh), mesh)
+        sched, _shard_size(cfg, mesh, walker_axes),
+        _num_shards(mesh, walker_axes), mesh, walker_axes)
     return make_relay(bk, cfg, params, mesh,
                       mailbox_cap=sched.mailbox_cap,
                       max_rounds=max_rounds, slot_slack=slot_slack,
                       path_cap=path_cap, diagnostics=True,
-                      exchange_fn=ex, census=True)
+                      exchange_fn=ex, census=True, overlap=overlap,
+                      walker_axes=walker_axes)
 
 
-def _num_shards(mesh) -> int:
+def _num_shards(mesh, walker_axes=()) -> int:
+    waxes = (walker_axes,) if isinstance(walker_axes, str) \
+        else tuple(walker_axes)
     n = 1
     for a in mesh.axis_names:
-        n *= mesh.shape[a]
+        if a not in waxes:
+            n *= mesh.shape[a]
     return n
 
 
-def _shard_size(cfg, mesh) -> int:
-    return cfg.num_vertices // _num_shards(mesh)
+def _shard_size(cfg, mesh, walker_axes=()) -> int:
+    return cfg.num_vertices // _num_shards(mesh, walker_axes)
 
 
 def audit_paths(paths, starts, *, full_length: bool = False) -> List[str]:
@@ -248,7 +243,8 @@ def run_chaos_relay(bk, cfg, params, mesh, state, walkers, seed,
                     max_rounds: Optional[int] = None,
                     slot_slack: Optional[int] = None,
                     path_cap: Optional[int] = None,
-                    full_length: bool = False):
+                    full_length: bool = False,
+                    overlap: bool = False, walker_axes=()):
     """Run one chaos schedule and enforce the conservation contract.
 
     Returns ``(paths (W, L+1), ChaosReport)`` when every live walker
@@ -260,7 +256,8 @@ def run_chaos_relay(bk, cfg, params, mesh, state, walkers, seed,
     """
     relay = make_chaos_relay(bk, cfg, params, mesh, sched,
                              max_rounds=max_rounds, slot_slack=slot_slack,
-                             path_cap=path_cap)
+                             path_cap=path_cap, overlap=overlap,
+                             walker_axes=walker_axes)
     paths, rounds, ovf, peak, finished, pending, faults = relay(
         state, walkers, seed)
     starts = np.asarray(walkers)

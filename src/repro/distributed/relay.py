@@ -1,4 +1,4 @@
-"""Bulk-synchronous walker relay: exact cross-shard whole walks.
+"""Walker relay: exact cross-shard whole walks, bulk or overlapped.
 
 The whole-walk megakernel walks shard-locally; before this module, a
 walker whose next hop left its shard was silently truncated
@@ -17,7 +17,7 @@ walkers into open slots; every array a walker touches is keyed by the
 *global* walker id it carries, so placement order is irrelevant to the
 result.
 
-One round, per shard, inside ``shard_map``:
+One bulk-synchronous round, per shard, inside ``shard_map``:
 
   1. **place** — the free-list allocator moves queued walkers (initial
      residents and later arrivals, held in a ``(W, 3)`` waiting queue
@@ -44,14 +44,42 @@ One round, per shard, inside ``shard_map``:
      not reallocated until its columns are delivered), so per-shard
      path state is strictly ``O(Wl · L)``.
 
+**Overlapped rounds** (``overlap=True``, DESIGN.md §10): the round is
+re-dataflowed so the exchanges consume the *previous* round's in-flight
+buffers (the outbox, and the pinned path rows) while the segment
+megakernel runs on this round's placements — launch(g+1, locals) ∥
+exchange(g, movers) instead of launch → exchange → barrier.  Fresh
+frontier exits land in the outbox (the in-flight buffer the *next*
+round's exchange drains), fresh remote path rows pin to their slots,
+and arrivals merge into the waiting queue after the segment's inputs
+are already fixed — double-buffered mailboxes, one swap per round.
+A crossing costs one extra round of latency; in exchange the collective
+is off the critical path.  Bit-exactness is schedule-invariant by
+construction: the per-(walker, t) uniform stream is a pure hash of
+``(seed, wid, t)``, so WHEN a walker walks cannot change WHERE.
+
+**2D vertex × walker mesh** (``walker_axes=``, DESIGN.md §13): the mesh
+axes split into vertex-shard axes (graph partitioned, S_v shards) and
+walker-replica axes (graph *replicated*, S_w groups).  Walker slots,
+waiting queues and home path blocks partition over the walker axes —
+each group relays its own W/S_w walkers over the vertex axes, frontier
+and path exchanges run ONLY along the vertex axes, and the round loop
+is kept globally synchronous by psum'ing the pending count over the
+whole mesh.  Walk throughput scales in S_w without re-sharding the
+graph; PRNG keys stay GLOBAL wids, so any (S_v, S_w) factorization is
+bit-identical to the single-shard walk.
+
 The loop runs until no walker is resident, queued, in an outbox, or
-pinned anywhere (a psum'd count), bounded by ``max_rounds``.  Because
-the per-(walker, t) uniform stream is a pure hash of ``(seed, wid, t)``
+pinned anywhere (a psum'd count), bounded by ``max_rounds`` (default:
+the tight ``round_bound`` below; tripping it raises
+``RelayIntegrityError`` under ``strict=True``).  Because the
+per-(walker, t) uniform stream is a pure hash of ``(seed, wid, t)``
 (``kernels/walk_fused.py:uniforms_at``) — or fed explicitly and
 gathered per slot — a resumed walker draws exactly what it would have
 drawn locally, so the home blocks concatenate to a (W, L+1) array
 *bit-identical* to the single-shard ``random_walk`` at any shard count
-(``tests/test_walk_relay.py``), with per-shard resident state ~S×
+and any schedule (``tests/test_walk_relay.py``,
+``tests/test_relay_overlap.py``), with per-shard resident state ~S×
 smaller than the wid-indexed layout it replaced (DESIGN.md §10).
 """
 
@@ -66,12 +94,20 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.walker_exchange import exchange_walkers, route_tag
 
 __all__ = ["relay_view", "relay_local", "make_relay", "shard_index",
-           "slot_count"]
+           "slot_count", "round_bound", "RelayIntegrityError",
+           "RelayPendingCensus"]
 
 
-def shard_index(mesh):
-    """This shard's linear index over ALL mesh axes (inside shard_map)."""
-    axes = tuple(mesh.axis_names)
+def _astuple(axis):
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def shard_index(mesh, axes=None):
+    """This shard's linear index over ``axes`` (default: ALL mesh axes),
+    inside shard_map."""
+    axes = tuple(mesh.axis_names) if axes is None else _astuple(axes)
+    if not axes:
+        return jnp.int32(0)
     s = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
         s = s * mesh.shape[a] + jax.lax.axis_index(a)
@@ -93,6 +129,90 @@ def slot_count(W: int, num_shards: int, slack: int | None = None) -> int:
     elif slack < 0:
         raise ValueError(f"slot slack must be >= 0; got {slack}")
     return min(W, Wb + slack)
+
+
+def round_bound(W: int, L: int, num_shards: int, *,
+                slot_slack: int | None = None,
+                mailbox_cap: int | None = None,
+                path_cap: int | None = None,
+                overlap: bool = False) -> int:
+    """Tight ``while_loop`` termination bound for one relay group.
+
+    The old safety bound, ``2·W·(L+2)``, charged every walker a full
+    mailbox drain per step — ~671M rounds at FULL sizing, which turned
+    a hung transport into an hours-long stall before anything raised.
+    This bound follows the actual progress guarantees; with a working
+    transport the loop *cannot* run longer (``exchange_walkers``'s
+    stable argsorts make each (sender, dest) mailbox FIFO, so every
+    wait below is a finite queue drain, not starvation):
+
+      * a frontier record waits at most ``ceil(W / c_w)`` rounds in the
+        outbox (at most W live walker records exist anywhere, its
+        mailbox delivers ``c_w`` of them per round, FIFO);
+      * a queued walker waits at most ``ceil(W / Wl)`` placement waves;
+        each wave lasts at most ``ceil(Wl / c_p) + 1`` rounds (a slot
+        is reusable once its pinned path row delivers — FIFO again);
+      * pipeline lag: 1 round per crossing bulk-synchronous, 2
+        overlapped (fresh records spend one round in the in-flight
+        buffer before their exchange departs);
+
+    summed over the at-most ``L + 1`` segment entries of one walker,
+    plus one final path-drain and a small constant.  At FULL sizing
+    (W=4.2M, L=80, S=256) this is ~3.6M rounds — ~190× tighter — and
+    at test scales it stays a comfortable 10–30× above observed rounds
+    (``tests/test_relay_overlap.py`` pins both directions).  ``c_w`` /
+    ``c_p`` are the walker / path mailbox caps (defaults mirror
+    ``exchange_walkers``: payload rows / S).
+    """
+    Wl = slot_count(W, num_shards, slot_slack)
+    payload_w = W if overlap else W + Wl
+    c_w = mailbox_cap if mailbox_cap else max(1, payload_w // num_shards)
+    c_p = path_cap if path_cap else max(1, Wl // num_shards)
+    waves = -(-W // Wl)
+    drain_p = -(-Wl // c_p)
+    lag = 2 if overlap else 1
+    per_step = -(-W // c_w) + waves * (drain_p + 1) + lag
+    return (L + 1) * per_step + drain_p + 8
+
+
+@dataclasses.dataclass(frozen=True)
+class RelayPendingCensus:
+    """What the relay knew when it hit ``max_rounds`` with work left —
+    the pending census ``RelayIntegrityError`` carries in strict mode."""
+    rounds: int             # rounds executed (== max_rounds)
+    pending_at_exit: int    # walkers still queued/in-flight/pinned
+    max_rounds: int         # the tripped bound
+
+
+class RelayIntegrityError(RuntimeError):
+    """The relay lost work, stalled, or produced malformed paths.
+
+    Carries a census as ``.report`` — a ``ChaosReport`` from the fault
+    harness (``distributed/chaos.py``) or a ``RelayPendingCensus`` from
+    a strict-mode ``max_rounds`` trip — and the path-audit findings as
+    ``.problems``: the structured diagnostic DESIGN.md §11 demands in
+    place of silent truncation.  The message is built defensively
+    (``getattr``) because the two census types share only a subset of
+    fields.
+    """
+
+    def __init__(self, report, problems=()):
+        self.report = report
+        self.problems = list(problems)
+        bits = []
+        lost = getattr(report, "lost", None)
+        if lost is not None:
+            bits.append(f"{lost} of {getattr(report, 'walkers', '?')} "
+                        f"walker(s) lost")
+        pending = getattr(report, "pending_at_exit", 0)
+        if pending:
+            bits.append(f"{pending} pending at exit "
+                        f"after {getattr(report, 'rounds', '?')} rounds")
+        if self.problems:
+            bits.append(f"{len(self.problems)} malformed path row(s): "
+                        + "; ".join(self.problems[:5]))
+        super().__init__("relay integrity violated: " + ", ".join(bits)
+                         + f" [{report}]")
 
 
 def relay_view(state, lo: int, shard_size: int):
@@ -149,7 +269,9 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
                 slot_slack: int | None = None,
                 path_cap: int | None = None,
                 diagnostics: bool = False,
-                exchange_fn=None, census: bool = False):
+                exchange_fn=None, census: bool = False,
+                overlap: bool = False, wid_base=0, sync_axes=None,
+                with_pending: bool = False):
     """Per-shard body of the super-step relay (call inside shard_map).
 
     ``bk``/``lcfg``/``params`` — an ``EngineBackend`` with
@@ -157,16 +279,35 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     (``num_vertices == shard_size``), and the walk params
     (deepwalk/ppr/simple); ``state`` — this shard's vertex slice of the
     ``BingoState`` (adjacency still holding *global* neighbor ids);
-    ``walkers`` (W,) int32 — global start vertices, replicated (each
-    shard adopts its residents); ``seed`` (1,) int32 — the shared
-    counter-PRNG seed (``ops.seed_from_key``); ``u`` — optional
-    (L, W, 6) fed uniforms, replicated (gathered per slot through the
-    slot→wid map each round).
+    ``walkers`` (W,) int32 — this group's global start vertices,
+    replicated over the vertex axes (each shard adopts its residents);
+    ``seed`` (1,) int32 — the shared counter-PRNG seed
+    (``ops.seed_from_key``); ``u`` — optional (L, W_global, 6) fed
+    uniforms, replicated (gathered per slot through the slot→wid map
+    each round — global wids index it directly).
 
     ``slot_slack`` sizes the compacted slot arrays (``slot_count``);
     ``mailbox_cap``/``path_cap`` bound the walker / path-record
     mailboxes per (sender, destination) pair — overflow of either is
-    re-enqueued, never dropped.
+    re-enqueued, never dropped.  ``max_rounds`` defaults to the tight
+    ``round_bound``.
+
+    ``overlap=True`` switches the round body to the overlapped schedule
+    (module docstring): the walker/path exchanges drain the carry's
+    in-flight buffers — filled by the *previous* round — concurrently
+    with this round's placement + segment, whose inputs are fixed
+    before any arrival merges.  Identical results, one extra round of
+    latency per crossing, collectives off the critical path.
+
+    ``wid_base``/``sync_axes`` are the 2D-mesh hooks (``make_relay``'s
+    ``walker_axes``): ``wid_base`` is this walker group's global wid
+    offset (slot→wid maps carry ``wid_base + local id``, so the PRNG
+    and fed-uniform gathers stay keyed by GLOBAL wid — the invariant
+    that makes every mesh factorization bit-identical), and
+    ``sync_axes`` names ALL mesh axes so the loop-condition psum keeps
+    every group iterating in lockstep (a group exiting early would
+    desynchronize the other groups' collectives).  Defaults (0, axis)
+    are the 1D relay.
 
     ``lcfg.cohorts`` (inherited from the global config by the
     ``dataclasses.replace`` in ``walk_relay``) reaches the segment
@@ -177,12 +318,13 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     Returns ``(paths (W//num_shards, L+1) int32, rounds, overflow)`` —
     this shard's *home block* of the stitched global path array (vertex
     ids global, the ``random_walk`` contract; walker ``wid``'s row
-    lives on shard ``wid // (W/S)``), the number of relay rounds
-    executed, and the total mailbox-overflow re-enqueues observed
-    (both replicated scalars).  With ``diagnostics=True`` a fourth
-    replicated scalar is appended: the peak number of slots in use on
-    any shard in any round (resident walkers + pinned path rows) —
-    the allocator-pressure signal benchmarks record.
+    lives on shard ``(wid - wid_base) // (W/S)`` of its group), the
+    number of relay rounds executed, and the total mailbox-overflow
+    re-enqueues observed (both replicated scalars).  With
+    ``diagnostics=True`` a fourth replicated scalar is appended: the
+    peak number of slots in use on any shard in any round (resident
+    walkers + pinned path rows) — the allocator-pressure signal
+    benchmarks record.
 
     Fault-injection hooks (DESIGN.md §11 — ``distributed/chaos.py``):
     ``exchange_fn(payload, cap=, r=, channel=)`` replaces the mailbox
@@ -195,8 +337,9 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     once at exit — duplicates from chaos cannot mask a dropped walker),
     the pending count at loop exit (> 0 means the relay gave up with
     work outstanding — only possible against ``max_rounds``), and the
-    psum'd fault counts.  Both default off; the production path is
-    unchanged.
+    psum'd fault counts.  ``with_pending=True`` appends the pending
+    count once more as the very last output (the strict-mode hook).
+    All default off; the production path is unchanged.
     """
     W = walkers.shape[0]
     L = params.length
@@ -207,18 +350,18 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
             f"walker count {W} must divide over {num_shards} shards "
             f"(pad starts with -1 free slots)")
     if max_rounds is None:
-        # Safety bound only — the loop exits when nothing is pending.
-        # Every round with pending work delivers >= 1 mailbox record
-        # (walker or path), places >= 1 queued walker, or advances >= 1
-        # resident, and a walker consumes at most L crossings + L steps
-        # + L path deliveries, so this covers even a cap=1 mailbox
-        # funneling every record one at a time.
-        max_rounds = 2 * W * (L + 2) + 8
+        max_rounds = round_bound(W, L, num_shards, slot_slack=slot_slack,
+                                 mailbox_cap=mailbox_cap,
+                                 path_cap=path_cap, overlap=overlap)
+    if sync_axes is None:
+        sync_axes = axis
     Wb = W // num_shards
     Wl = slot_count(W, num_shards, slot_slack)
     lo = sidx * shard_size
     view = relay_view(state, lo, shard_size)
     slot_ids = jnp.arange(Wl, dtype=jnp.int32)
+    group_axes = tuple(a for a in _astuple(sync_axes)
+                       if a not in _astuple(axis))
 
     if exchange_fn is None:
         def exchange_fn(payload, *, cap, r, channel):
@@ -229,7 +372,7 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     # Initial residents queue at the shard owning their start vertex;
     # the allocator drains the queue into slots from round 1 on (a
     # start-vertex hot spot may exceed Wl — exactness does not care).
-    wid0 = jnp.arange(W, dtype=jnp.int32)
+    wid0 = jnp.arange(W, dtype=jnp.int32) + wid_base
     resident0 = (walkers >= 0) & (walkers // shard_size == sidx)
     waiting0 = jnp.stack(
         [jnp.where(resident0, walkers, -1),
@@ -239,7 +382,8 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
     pend_path0 = jnp.full((Wl, L + 1), -1, jnp.int32)
     pend_wid0 = jnp.full((Wl,), -1, jnp.int32)
     acc0 = jnp.full((Wb, L + 1), -1, jnp.int32)
-    pending0 = jax.lax.psum(resident0.sum(dtype=jnp.int32), axis_name=axis)
+    pending0 = jax.lax.psum(resident0.sum(dtype=jnp.int32),
+                            axis_name=sync_axes)
     # Census/fault carries (dead weight unless census=True): a per-shard
     # wid bitmap of walkers seen reaching a terminal step here, and the
     # accumulated (drop, dup, delay) injection counts from exchange_fn.
@@ -282,6 +426,26 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
             peak,
             occupied.sum(dtype=jnp.int32) + (~free).sum(dtype=jnp.int32))
 
+        if overlap:
+            # -- in-flight exchanges: drain the buffers the PREVIOUS
+            # round filled.  Both payloads are pure functions of the
+            # carry — nothing below them feeds the segment's inputs —
+            # so XLA's latency-hiding scheduler is free to run the
+            # all_to_alls concurrently with the megakernel launch:
+            # launch(g+1, locals) ∥ exchange(g, movers).
+            arrived, spill_w, n_spill_w, f_w = exchange_fn(
+                outbox, cap=mailbox_cap, r=r, channel=0)
+            pinned = pend_wid >= 0
+            in_home = jnp.where(pinned, (pend_wid - wid_base) // Wb, -1)
+            pay_p = jnp.concatenate(
+                [jnp.where(pinned, route_tag(in_home, shard_size),
+                           -1)[:, None],
+                 jnp.where(pinned, pend_wid, -1)[:, None],
+                 jnp.where(pinned, slot_ids, -1)[:, None],
+                 jnp.where(pinned[:, None], pend_path, -1)], axis=1)
+            got, spill_p, n_spill_p, f_p = exchange_fn(
+                pay_p, cap=path_cap, r=r, channel=1)
+
         # -- segment: one resumable megakernel launch over the compacted
         # slots; the slot→wid map keys the hash PRNG (and gathers the
         # fed stream) so each walker draws its own columns.
@@ -292,68 +456,121 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
             view, lcfg, starts, slot_t0, seed, params, u=u_slots,
             wid=slot_wid)
 
-        # -- route walkers: fresh frontier exits + outbox leftovers ride
-        # one all_to_all as (vertex, step, wid) records; arrivals queue
-        # at the receiver (placement happens next round), spills return
-        # to the sender's outbox.
         fr_ok = occupied & (frontier[:, 0] >= 0)
         # census: an occupied slot whose frontier is exhausted finished
         # its walk HERE — mark its wid.  De-duping by wid (a bitmap, not
         # a counter) is what makes chaos duplicates unable to mask a
         # dropped walker: the same wid finishing twice sets one bit.
         term = occupied & (frontier[:, 0] < 0)
-        fin = fin.at[jnp.where(term, slot_wid, W)].set(True, mode="drop")
+        fin = fin.at[jnp.where(term, slot_wid - wid_base, W)].set(
+            True, mode="drop")
         new_fr = jnp.where(
             fr_ok[:, None],
             jnp.stack([frontier[:, 0], frontier[:, 1], slot_wid], -1), -1)
-        pay_w = jnp.concatenate([outbox, new_fr], axis=0)
-        arrived, spill_w, n_spill_w, f_w = exchange_fn(
-            pay_w, cap=mailbox_cap, r=r, channel=0)
-        outbox = _compact_rows(_dedup_wid(spill_w), W)
-        waiting = _compact_rows(_dedup_wid(
-            jnp.concatenate([waiting, arrived], axis=0)), W)
 
-        # -- route paths: every slot that walked this round emits its
-        # path columns (translated to global ids) toward the walker's
-        # home shard; pinned rows from earlier rounds retry alongside.
-        row_path = jnp.where(occupied[:, None],
-                             jnp.where(paths >= 0, paths + lo, -1),
-                             pend_path)
-        row_wid = jnp.where(occupied, slot_wid, pend_wid)
-        has_row = row_wid >= 0
-        home = jnp.where(has_row, row_wid // Wb, -1)
-        local = has_row & (home == sidx)
-        lrow = jnp.where(local, row_wid - sidx * Wb, Wb)
-        acc = acc.at[lrow].max(
-            jnp.where(local[:, None], row_path, -1), mode="drop")
-        remote = has_row & (home != sidx)
-        pay_p = jnp.concatenate(
-            [jnp.where(remote, route_tag(home, shard_size), -1)[:, None],
-             jnp.where(remote, row_wid, -1)[:, None],
-             jnp.where(remote, slot_ids, -1)[:, None],
-             jnp.where(remote[:, None], row_path, -1)], axis=1)
-        got, spill_p, n_spill_p, f_p = exchange_fn(
-            pay_p, cap=path_cap, r=r, channel=1)
-        faults = faults + f_w + f_p
-        g_ok = got[:, 0] >= 0
-        grow = jnp.where(g_ok, got[:, 1] - sidx * Wb, Wb)
-        acc = acc.at[grow].max(
-            jnp.where(g_ok[:, None], got[:, 3:], -1), mode="drop")
-        # spilled rows stay pinned to their slot (re-keyed by the slot
-        # field — exchange returns them in sort order); delivered and
-        # home-local rows free theirs.
-        s_ok = spill_p[:, 0] >= 0
-        s_slot = jnp.where(s_ok, spill_p[:, 2], Wl)
-        pend_path = jnp.full((Wl, L + 1), -1, jnp.int32).at[s_slot].set(
-            spill_p[:, 3:], mode="drop")
-        pend_wid = jnp.full((Wl,), -1, jnp.int32).at[s_slot].set(
-            spill_p[:, 1], mode="drop")
+        if overlap:
+            # -- buffer swap: fresh frontier exits + walker-channel
+            # spills become the NEXT round's in-flight outbox; walker
+            # arrivals join the waiting queue only now, after the
+            # segment's inputs were fixed (the landing buffer).
+            outbox = _compact_rows(
+                _dedup_wid(jnp.concatenate([spill_w, new_fr], axis=0)), W)
+            waiting = _compact_rows(_dedup_wid(
+                jnp.concatenate([waiting, arrived], axis=0)), W)
+
+            # -- fresh path rows: home-local columns scatter straight
+            # into the home block; remote ones pin to the slot that
+            # walked them and ride NEXT round's exchange.
+            frow_path = jnp.where(occupied[:, None],
+                                  jnp.where(paths >= 0, paths + lo, -1),
+                                  -1)
+            frow_wid = jnp.where(occupied, slot_wid, -1)
+            has_frow = frow_wid >= 0
+            fhome = jnp.where(has_frow, (frow_wid - wid_base) // Wb, -1)
+            flocal = has_frow & (fhome == sidx)
+            lrow = jnp.where(flocal, (frow_wid - wid_base) - sidx * Wb,
+                             Wb)
+            acc = acc.at[lrow].max(
+                jnp.where(flocal[:, None], frow_path, -1), mode="drop")
+            g_ok = got[:, 0] >= 0
+            grow = jnp.where(g_ok, (got[:, 1] - wid_base) - sidx * Wb,
+                             Wb)
+            acc = acc.at[grow].max(
+                jnp.where(g_ok[:, None], got[:, 3:], -1), mode="drop")
+            # spilled in-flight rows re-pin to their slot; fresh remote
+            # rows pin to theirs.  The two slot sets are disjoint by
+            # construction: segment targets were free at round start,
+            # spilled rows' slots were pinned.
+            s_ok = spill_p[:, 0] >= 0
+            s_slot = jnp.where(s_ok, spill_p[:, 2], Wl)
+            pend_path = jnp.full((Wl, L + 1), -1, jnp.int32) \
+                .at[s_slot].set(spill_p[:, 3:], mode="drop")
+            pend_wid = jnp.full((Wl,), -1, jnp.int32) \
+                .at[s_slot].set(spill_p[:, 1], mode="drop")
+            fremote = has_frow & (fhome != sidx)
+            rm_slot = jnp.where(fremote, slot_ids, Wl)
+            pend_path = pend_path.at[rm_slot].set(
+                jnp.where(fremote[:, None], frow_path, -1), mode="drop")
+            pend_wid = pend_wid.at[rm_slot].set(
+                jnp.where(fremote, frow_wid, -1), mode="drop")
+            faults = faults + f_w + f_p
+        else:
+            # -- route walkers (bulk): fresh frontier exits + outbox
+            # leftovers ride one all_to_all as (vertex, step, wid)
+            # records; arrivals queue at the receiver (placement happens
+            # next round), spills return to the sender's outbox.
+            pay_w = jnp.concatenate([outbox, new_fr], axis=0)
+            arrived, spill_w, n_spill_w, f_w = exchange_fn(
+                pay_w, cap=mailbox_cap, r=r, channel=0)
+            outbox = _compact_rows(_dedup_wid(spill_w), W)
+            waiting = _compact_rows(_dedup_wid(
+                jnp.concatenate([waiting, arrived], axis=0)), W)
+
+            # -- route paths (bulk): every slot that walked this round
+            # emits its path columns (translated to global ids) toward
+            # the walker's home shard; pinned rows from earlier rounds
+            # retry alongside.
+            row_path = jnp.where(occupied[:, None],
+                                 jnp.where(paths >= 0, paths + lo, -1),
+                                 pend_path)
+            row_wid = jnp.where(occupied, slot_wid, pend_wid)
+            has_row = row_wid >= 0
+            home = jnp.where(has_row, (row_wid - wid_base) // Wb, -1)
+            local = has_row & (home == sidx)
+            lrow = jnp.where(local, (row_wid - wid_base) - sidx * Wb, Wb)
+            acc = acc.at[lrow].max(
+                jnp.where(local[:, None], row_path, -1), mode="drop")
+            remote = has_row & (home != sidx)
+            pay_p = jnp.concatenate(
+                [jnp.where(remote, route_tag(home, shard_size),
+                           -1)[:, None],
+                 jnp.where(remote, row_wid, -1)[:, None],
+                 jnp.where(remote, slot_ids, -1)[:, None],
+                 jnp.where(remote[:, None], row_path, -1)], axis=1)
+            got, spill_p, n_spill_p, f_p = exchange_fn(
+                pay_p, cap=path_cap, r=r, channel=1)
+            faults = faults + f_w + f_p
+            g_ok = got[:, 0] >= 0
+            grow = jnp.where(g_ok, (got[:, 1] - wid_base) - sidx * Wb,
+                             Wb)
+            acc = acc.at[grow].max(
+                jnp.where(g_ok[:, None], got[:, 3:], -1), mode="drop")
+            # spilled rows stay pinned to their slot (re-keyed by the
+            # slot field — exchange returns them in sort order);
+            # delivered and home-local rows free theirs.
+            s_ok = spill_p[:, 0] >= 0
+            s_slot = jnp.where(s_ok, spill_p[:, 2], Wl)
+            pend_path = jnp.full((Wl, L + 1), -1, jnp.int32) \
+                .at[s_slot].set(spill_p[:, 3:], mode="drop")
+            pend_wid = jnp.full((Wl,), -1, jnp.int32) \
+                .at[s_slot].set(spill_p[:, 1], mode="drop")
 
         pending = jax.lax.psum(
             (waiting[:, 0] >= 0).sum(dtype=jnp.int32)
             + (outbox[:, 0] >= 0).sum(dtype=jnp.int32)
-            + (pend_wid >= 0).sum(dtype=jnp.int32), axis_name=axis)
-        ovf = ovf + jax.lax.psum(n_spill_w + n_spill_p, axis_name=axis)
+            + (pend_wid >= 0).sum(dtype=jnp.int32), axis_name=sync_axes)
+        ovf = ovf + jax.lax.psum(n_spill_w + n_spill_p,
+                                 axis_name=sync_axes)
         return (r + 1, pend_path, pend_wid, waiting, outbox, acc, ovf,
                 peak, fin, faults, pending)
 
@@ -364,19 +581,27 @@ def relay_local(bk, lcfg, params, state, walkers, seed, u=None, *,
          jnp.int32(0), jnp.int32(0), fin0, faults0, pending0))
 
     # acc IS this shard's home block: walker wid's row landed here iff
-    # wid // Wb == sidx, so the P(axis)-concatenated output is the
-    # coherent (W, L+1) array with no cross-shard stitch collective.
+    # (wid - wid_base) // Wb == sidx, so the P(walker+vertex axes)-
+    # concatenated output is the coherent (W, L+1) array with no
+    # cross-shard stitch collective.
     outs = [acc, rounds, ovf]
     if diagnostics:
-        outs.append(jax.lax.pmax(peak, axis_name=axis))
+        outs.append(jax.lax.pmax(peak, axis_name=sync_axes))
     if census:
         # Collectives run ONCE at exit, not per round: a wid finished iff
-        # any shard's bitmap has its bit (walkers that started as -1 free
-        # slots never set a bit and are excluded by construction).
+        # any vertex shard's bitmap has its bit (walkers that started as
+        # -1 free slots never set a bit and are excluded by
+        # construction); group counts — disjoint wid ranges — sum over
+        # the walker axes.
         fin_any = jax.lax.psum(fin.astype(jnp.int32), axis_name=axis) > 0
-        outs.append(jnp.sum(fin_any.astype(jnp.int32)))
+        n_fin = jnp.sum(fin_any.astype(jnp.int32))
+        if group_axes:
+            n_fin = jax.lax.psum(n_fin, axis_name=group_axes)
+        outs.append(n_fin)
         outs.append(pending_final)
-        outs.append(jax.lax.psum(faults, axis_name=axis))
+        outs.append(jax.lax.psum(faults, axis_name=sync_axes))
+    if with_pending:
+        outs.append(pending_final)
     return tuple(outs)
 
 
@@ -385,58 +610,111 @@ def make_relay(bk, cfg, params, mesh, *, mailbox_cap: int | None = None,
                slot_slack: int | None = None,
                path_cap: int | None = None,
                diagnostics: bool = False,
-               exchange_fn=None, census: bool = False):
+               exchange_fn=None, census: bool = False,
+               overlap: bool = False, walker_axes=(),
+               strict: bool = False):
     """Build the shard_mapped relay: the one wrapper every layer shares.
 
-    Vertex-shards ``cfg.num_vertices`` over ALL of ``mesh``'s axes and
-    returns ``run(state, walkers, seed, u=None) -> (paths (W, L+1),
-    rounds, overflow)`` — ``state`` a vertex-sharded (or logically
-    shardable) ``BingoState``, ``walkers`` (W,) int32 global start
-    vertices replicated (-1 = free slot; W must divide over the shard
-    count), ``seed`` (1,) int32 (``ops.seed_from_key``), ``u`` optional
-    (L, W, 6) fed uniforms.  ``slot_slack`` sizes the compacted
-    per-shard slot arrays (``slot_count``); ``diagnostics=True``
-    appends the peak per-shard slot occupancy as a fourth output.
-    ``exchange_fn``/``census`` thread to ``relay_local`` — the chaos
-    harness (``distributed/chaos.py``) swaps the mailbox all_to_all and
-    reads the (distinct-finished, pending-at-exit, faults) census
-    outputs it appends.  Used by the ``walk_relay`` launch cell, the
-    sharded ``DynamicWalkEngine``, benchmarks and tests, so the
-    divisibility validation and spec plumbing live in exactly one
-    place.
+    Vertex-shards ``cfg.num_vertices`` over ``mesh``'s axes MINUS
+    ``walker_axes`` and returns ``run(state, walkers, seed, u=None) ->
+    (paths (W, L+1), rounds, overflow)`` — ``state`` a vertex-sharded
+    (or logically shardable) ``BingoState``, ``walkers`` (W,) int32
+    global start vertices (-1 = free slot; W must divide over the
+    walker groups × vertex shards), ``seed`` (1,) int32
+    (``ops.seed_from_key``), ``u`` optional (L, W, 6) fed uniforms.
+
+    ``walker_axes`` names the mesh axes that replicate the graph and
+    partition the walkers instead (DESIGN.md §13): an (S_v × S_w) mesh
+    runs S_w independent walker groups of W/S_w slots each, each group
+    relaying over its own S_v vertex shards, with frontier/path
+    exchanges confined to the vertex axes and one global psum keeping
+    the round loops in lockstep.  ``()`` (default) is the 1D relay
+    over all axes.  ``overlap=True`` selects the overlapped round
+    schedule (module docstring) — identical results, exchanges off the
+    critical path.
+
+    ``slot_slack`` sizes the compacted per-shard slot arrays
+    (``slot_count``); ``diagnostics=True`` appends the peak per-shard
+    slot occupancy as a fourth output.  ``strict=True`` raises
+    ``RelayIntegrityError`` (with the pending census) when the relay
+    exits against ``max_rounds`` with work outstanding — the check
+    needs concrete outputs, so it fires on eager calls and is skipped
+    under an enclosing jit (jitted callers read the census outputs
+    instead).  ``exchange_fn``/``census`` thread to ``relay_local`` —
+    the chaos harness (``distributed/chaos.py``) swaps the mailbox
+    all_to_all and reads the (distinct-finished, pending-at-exit,
+    faults) census outputs it appends.  Used by the ``walk_relay`` /
+    ``walk_relay_2d`` launch cells, the sharded ``DynamicWalkEngine``,
+    benchmarks and tests, so the divisibility validation and spec
+    plumbing live in exactly one place.
     """
     from jax.experimental.shard_map import shard_map
 
     axes = tuple(mesh.axis_names)
+    waxes = _astuple(walker_axes)
+    for a in waxes:
+        if a not in axes:
+            raise ValueError(f"walker axis {a!r} not in mesh axes {axes}")
+    vaxes = tuple(a for a in axes if a not in waxes)
+    if not vaxes:
+        raise ValueError(
+            "at least one mesh axis must remain a vertex axis "
+            f"(walker_axes={waxes} covers all of {axes})")
     num_shards = 1
-    for a in axes:
+    for a in vaxes:
         num_shards *= mesh.shape[a]
+    num_groups = 1
+    for a in waxes:
+        num_groups *= mesh.shape[a]
     if cfg.num_vertices % num_shards:
         raise ValueError(
             f"num_vertices {cfg.num_vertices} must divide over "
             f"{num_shards} shards (pad the vertex space)")
     shard_size = cfg.num_vertices // num_shards
     lcfg = dataclasses.replace(cfg, num_vertices=shard_size)
+    with_pending = bool(strict)
 
     def local(state, walkers, seed, *rest):
+        Wg = walkers.shape[0]
         return relay_local(
             bk, lcfg, params, state, walkers, seed,
-            rest[0] if rest else None, sidx=shard_index(mesh),
-            num_shards=num_shards, shard_size=shard_size, axis=axes,
+            rest[0] if rest else None, sidx=shard_index(mesh, vaxes),
+            num_shards=num_shards, shard_size=shard_size, axis=vaxes,
             mailbox_cap=mailbox_cap, max_rounds=max_rounds,
             slot_slack=slot_slack, path_cap=path_cap,
             diagnostics=diagnostics, exchange_fn=exchange_fn,
-            census=census)
+            census=census, overlap=overlap,
+            wid_base=shard_index(mesh, waxes) * Wg, sync_axes=axes,
+            with_pending=with_pending)
 
     def run(state, walkers, seed, u=None):
-        sspec = jax.tree.map(lambda _: P(axes), state)
-        in_specs = (sspec, P(), P()) + (() if u is None else (P(),))
-        out_specs = (P(axes), P(), P()) \
+        W = walkers.shape[0]
+        if W % num_groups:
+            raise ValueError(
+                f"walker count {W} must divide over {num_groups} walker "
+                f"group(s) (axes {waxes})")
+        sspec = jax.tree.map(lambda _: P(vaxes), state)
+        wspec = P(waxes) if waxes else P()
+        in_specs = (sspec, wspec, P()) + (() if u is None else (P(),))
+        out_specs = (P(waxes + vaxes), P(), P()) \
             + ((P(),) if diagnostics else ()) \
-            + ((P(), P(), P()) if census else ())
+            + ((P(), P(), P()) if census else ()) \
+            + ((P(),) if with_pending else ())
         f = shard_map(local, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=False)
         args = (state, walkers, seed) + (() if u is None else (u,))
-        return f(*args)
+        out = f(*args)
+        if with_pending:
+            out, pend = tuple(out[:-1]), out[-1]
+            if not isinstance(pend, jax.core.Tracer) and int(pend) > 0:
+                bound = max_rounds if max_rounds is not None else \
+                    round_bound(W // num_groups, params.length,
+                                num_shards, slot_slack=slot_slack,
+                                mailbox_cap=mailbox_cap,
+                                path_cap=path_cap, overlap=overlap)
+                raise RelayIntegrityError(RelayPendingCensus(
+                    rounds=int(out[1]), pending_at_exit=int(pend),
+                    max_rounds=bound))
+        return out
 
     return run

@@ -25,6 +25,17 @@ so hops keep their identity across shards.  Mailbox overflow is
 returned to the sender (``leftover``) with an overflow count, and the
 relay re-enqueues them next round — conservation is exact
 (``tests/test_distributed.py``).
+
+Under the overlapped relay schedule (DESIGN.md §10) the mailboxes are
+*double-buffered*: a payload sits in an in-flight buffer for one full
+round while the next segment kernel runs, then lands and merges into
+the resident pool, with leftovers re-queued through the next in-flight
+buffer.  ``exchange_walkers`` itself is oblivious to this — it routes
+whatever buffer it is handed — but the conservation ledger must hold
+across the buffer hand-offs too: in-flight + landed + resident +
+leftover == total at every round (``tests/test_exchange_buffers.py``).
+On a 2D vertex × walker mesh (§13), ``axis`` is the *vertex* axes only
+— each walker group runs its own independent transport.
 """
 
 from __future__ import annotations

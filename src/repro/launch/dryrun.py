@@ -129,6 +129,7 @@ def main():
         todo.append(("bingo-walk", "walk_step"))
         todo.append(("bingo-walk", "walk_whole"))
         todo.append(("bingo-walk", "walk_relay"))
+        todo.append(("bingo-walk", "walk_relay_2d"))
         todo.append(("bingo-walk", "update_walk"))
         todo.append(("bingo-walk", "serve_round"))
     else:

@@ -42,14 +42,20 @@ def _committed(fname: str):
 def mem_deltas():
     """(key, old GiB/dev, new GiB/dev, old fit, new fit) for every
     dry-run JSON whose memory footprint changed vs the committed
-    snapshot — the fit-regression signal a PR diff should surface."""
+    snapshot — the fit-regression signal a PR diff should surface.
+    A cell with no committed counterpart (e.g. a freshly added
+    S_v × S_w factorization) is included with ``old = None``: a new
+    cell's footprint and fit verdict belong in the PR surface too,
+    they just have no delta."""
     deltas = []
     for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
         new = json.load(open(f))
         old = _committed(f)
-        if old is None:
-            continue
         gib = lambda d: d["memory_analysis"]["total_nonalias_bytes"] / 2**30
+        if old is None:
+            deltas.append(((new["mesh"], new["arch"], new["shape"]),
+                           None, gib(new), None, new["hbm_fit"]))
+            continue
         if abs(gib(new) - gib(old)) < 1e-3 and new["hbm_fit"] == old["hbm_fit"]:
             continue
         deltas.append(((new["mesh"], new["arch"], new["shape"]),
@@ -84,6 +90,18 @@ def _stamp(snap: dict):
             json.dumps(snap.get("sizing", {}), sort_keys=True))
 
 
+def _mesh_fact(snap: dict, case: str):
+    """The (S_v, S_w) mesh factorization ``case`` was measured under,
+    read from its ``mesh_sv``/``mesh_sw`` extras (None = unstamped,
+    i.e. a case that predates factorized meshes)."""
+    ex = snap.get("extras", {})
+    sv = ex.get(f"{case}.mesh_sv")
+    sw = ex.get(f"{case}.mesh_sw")
+    if sv is None and sw is None:
+        return None
+    return (sv, sw)
+
+
 def perf_deltas(rel_thresh: float = 0.05):
     """(file, case, metric, old, new) throughput deltas vs the committed
     BENCH_*.json — the walk/update analogue of ``mem_deltas``.
@@ -91,8 +109,12 @@ def perf_deltas(rel_thresh: float = 0.05):
     Snapshots are matched by ``_stamp``; a working-tree snapshot with no
     same-stamp committed counterpart contributes no rows (new platform
     or sizing — nothing to diff against), and cross-stamp pairs are
-    never compared.  Only deltas beyond ``rel_thresh`` relative change
-    are reported (timing noise suppression).
+    never compared.  A case whose (S_v, S_w) mesh factorization changed
+    (its ``mesh_sv``/``mesh_sw`` extras differ, or only one side is
+    stamped) is refused the same way: a 64×4 relay against a 16×16 one
+    times different collectives and table replication, not a perf
+    trajectory.  Only deltas beyond ``rel_thresh`` relative change are
+    reported (timing noise suppression).
     """
     deltas = []
     for fname in BENCH_FILES:
@@ -113,6 +135,8 @@ def perf_deltas(rel_thresh: float = 0.05):
                 ov = old.get("cases", {}).get(case)
                 if ov is None or not ov:
                     continue
+                if _mesh_fact(snap, case) != _mesh_fact(old, case):
+                    continue              # cross-factorization — refuse
                 if abs(val - ov) / abs(ov) < rel_thresh:
                     continue
                 deltas.append((fname, case, metric, float(ov), float(val)))
@@ -167,9 +191,13 @@ def main():
               "| delta | fit HEAD→now |")
         print("|" + "---|" * 7)
         for (mesh, arch, shape), g0, g1, f0, f1 in deltas:
-            print(f"| {mesh} | {arch} | {shape} | {g0:.2f} | {g1:.2f} "
-                  f"| {g1 - g0:+.2f} "
-                  f"| {'Y' if f0 else 'N'}→{'Y' if f1 else 'N'} |")
+            if g0 is None:
+                print(f"| {mesh} | {arch} | {shape} | new | {g1:.2f} "
+                      f"| — | —→{'Y' if f1 else 'N'} |")
+            else:
+                print(f"| {mesh} | {arch} | {shape} | {g0:.2f} | {g1:.2f} "
+                      f"| {g1 - g0:+.2f} "
+                      f"| {'Y' if f0 else 'N'}→{'Y' if f1 else 'N'} |")
     pdeltas = perf_deltas()
     if pdeltas:
         print("\n### Throughput deltas vs committed BENCH_*.json (HEAD, "

@@ -23,7 +23,16 @@ Shapes: ``walk_step``  — one synchronous step of all walkers (sample +
         to their new owner and resume there, path columns route to the
         walker's home shard block, and the concatenated home blocks are
         bit-identical to the single-shard walk (the fix for
-        walk_whole's boundary truncation, at O(W/S) resident state);
+        walk_whole's boundary truncation, at O(W/S) resident state) —
+        now with the overlapped round schedule (DESIGN.md §10: round
+        g's exchanges fly while round g+1's segment runs);
+        ``walk_relay_2d`` — the same relay on the chips re-meshed as
+        (S_v vertex shards × S_w walker replicas) (DESIGN.md §13):
+        graph tables replicated across the walker axis, walker slots
+        and home path blocks partitioned across it, frontier exchange
+        only along the vertex axis — walk throughput scales in S_w
+        without re-sharding the graph, at S_w × table replication
+        (which is why FULL needs the 64 × 4 factorization, not 16 × 16);
         ``update_step`` — one batched graph update (100K updates) through
         ``backend.apply_updates`` (DESIGN.md §9);
         ``update_walk`` — the streaming-serving round (DESIGN.md §9):
@@ -236,8 +245,12 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
         # bit-identical to the single-shard walk at any shard count —
         # and unlike the wid-indexed PR-4 layout (~62 GiB/dev at FULL,
         # unfit) the resident state is O(W/S), so FULL must now FIT
-        # (CI gates hbm_fit on this cell's dry-run).
-        walk_relay = make_relay(engine, bcfg, wparams, mesh)
+        # (CI gates hbm_fit on this cell's dry-run).  overlap=True runs
+        # the production schedule: round g's frontier/path exchanges fly
+        # while round g+1's segment walks the stay-locals — bit-exact
+        # either way, the PRNG is schedule-invariant (DESIGN.md §10).
+        walk_relay = make_relay(engine, bcfg, wparams, mesh,
+                                overlap=overrides.get("overlap", True))
 
         rep = NamedSharding(mesh, P())
         return CellSpec(
@@ -252,6 +265,59 @@ def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
             out_shardings=(NamedSharding(mesh, P(dp)), None, None),
             donate_argnums=(),
             meta={"tokens": W * L, "cfg_obj": _WalkCfgShim(wcfg, bcfg)},
+        )
+
+    if shape_name == "walk_relay_2d":
+        from repro.core.walks import WalkParams
+        from repro.distributed.relay import make_relay
+        W = wcfg.walkers
+        L = wcfg.walk_length
+        engine = get_backend(bcfg.backend)
+        wparams = WalkParams(kind="deepwalk", length=L)
+
+        # The 2D vertex × walker factorization (DESIGN.md §13): the same
+        # chips re-meshed as (S_v vertex shards × S_w walker replicas).
+        # Graph tables shard their vertex dim over "data" ONLY — each of
+        # the S_w walker groups holds a full replica of its vertex
+        # shard's tables — while walker slots and home path blocks
+        # partition over "walker", so each group relays W/S_w walkers
+        # over its private vertex-axis transport.  Walk throughput
+        # scales in S_w without re-sharding the graph; the price is
+        # S_w × table replication, which the hbm_fit gate re-costs: at
+        # FULL, 16 × 16 does NOT fit (the 41 M-vertex tables need
+        # S_v ≥ ~21), 64 × 4 does — that asymmetry is the §13 table.
+        S_w = overrides.get("walker_replicas", 4)
+        if chips % S_w or W % S_w:
+            raise ValueError(
+                f"walker_replicas={S_w} must divide chips={chips} "
+                f"and walkers={W}")
+        S_v = chips // S_w
+        mesh2 = jax.sharding.Mesh(mesh.devices.reshape(S_v, S_w),
+                                  ("data", "walker"))
+
+        def vspec(leaf):
+            return P("data", *([None] * (leaf.ndim - 1)))
+
+        sspecs2 = jax.tree.map(vspec, state_sds)
+        walk_relay = make_relay(engine, bcfg, wparams, mesh2,
+                                overlap=overrides.get("overlap", True),
+                                walker_axes=("walker",))
+
+        rep = NamedSharding(mesh2, P())
+        return CellSpec(
+            arch="bingo-walk", shape_name=shape_name, kind="prefill",
+            fn=walk_relay,
+            args_sds=(state_sds, jax.ShapeDtypeStruct((W,), jnp.int32),
+                      jax.ShapeDtypeStruct((1,), jnp.int32)),
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh2, s),
+                                       sspecs2,
+                                       is_leaf=lambda s: isinstance(s, P)),
+                          NamedSharding(mesh2, P("walker")), rep),
+            out_shardings=(NamedSharding(mesh2, P(("walker", "data"))),
+                           None, None),
+            donate_argnums=(),
+            meta={"tokens": W * L, "cfg_obj": _WalkCfgShim(wcfg, bcfg),
+                  "mesh_sv": S_v, "mesh_sw": S_w},
         )
 
     if shape_name == "update_step":

@@ -75,7 +75,8 @@ class DynamicWalkEngine:
                  backend: Optional[str] = None,
                  whole_walk: Optional[bool] = None, seed: int = 0,
                  mesh=None, mailbox_cap: Optional[int] = None,
-                 guard=None, walk_buckets=None, defer_guard: bool = False):
+                 guard=None, walk_buckets=None, defer_guard: bool = False,
+                 walker_axes=(), relay_overlap: bool = True):
         self.cfg = cfg
         self.params = params
         self._state = state
@@ -89,7 +90,8 @@ class DynamicWalkEngine:
             for a in mesh.axis_names:
                 self.num_shards *= mesh.shape[a]
             self._state, self._update, self._walk = self._build_sharded(
-                state, cfg, params, backend, mesh, mailbox_cap)
+                state, cfg, params, backend, mesh, mailbox_cap,
+                walker_axes, relay_overlap)
         # Fixed-lane walk cohorts (DESIGN.md §12): every walk batch is
         # padded up to the smallest bucket >= its request count, so a
         # request-size-jittered stream only ever compiles |buckets|
@@ -123,14 +125,20 @@ class DynamicWalkEngine:
         self.walks_served = 0
 
     @staticmethod
-    def _build_sharded(state, cfg, params, backend, mesh, mailbox_cap):
-        """Vertex-partitioned serving closures (DESIGN.md §10).
+    def _build_sharded(state, cfg, params, backend, mesh, mailbox_cap,
+                       walker_axes=(), overlap=True):
+        """Vertex-partitioned serving closures (DESIGN.md §10/§13).
 
-        The state's vertex dim shards over the full mesh; update batches
-        and walk starts stay replicated (global ids).  Ingest = owner-
-        masked ``apply_updates`` per shard (psum'd stats); walk = the
-        super-step relay, whose stitched (W, L+1) paths are bit-equal to
-        the single-device whole walk for the same key.
+        The state's vertex dim shards over the mesh's *vertex* axes
+        (every axis not named in ``walker_axes``) and is replicated
+        across the walker axes; update batches and walk starts stay
+        replicated / walker-partitioned (global ids).  Ingest = owner-
+        masked ``apply_updates`` per shard (psum'd stats — every walker
+        replica applies the same owned lanes, keeping the replicas in
+        lockstep, so stats sum over vertex axes only); walk = the
+        super-step relay — overlapped rounds by default, the production
+        schedule — whose stitched (W, L+1) paths are bit-equal to the
+        single-device whole walk for the same key.
         """
         from jax.experimental.shard_map import shard_map
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -139,26 +147,30 @@ class DynamicWalkEngine:
         from repro.kernels.ops import seed_from_key
 
         axes = tuple(mesh.axis_names)
-        num_shards = 1
-        for a in axes:
-            num_shards *= mesh.shape[a]
+        waxes = (walker_axes,) if isinstance(walker_axes, str) \
+            else tuple(walker_axes)
+        vaxes = tuple(a for a in axes if a not in waxes)
+        num_vshards = 1
+        for a in vaxes:
+            num_vshards *= mesh.shape[a]
         bk = get_backend(cfg.backend if backend is None else backend)
         relay = make_relay(bk, cfg, params, mesh,
-                           mailbox_cap=mailbox_cap)   # validates V % S
-        shard_size = cfg.num_vertices // num_shards
+                           mailbox_cap=mailbox_cap, overlap=overlap,
+                           walker_axes=waxes)         # validates V % S_v
+        shard_size = cfg.num_vertices // num_vshards
         lcfg = dataclasses.replace(cfg, num_vertices=shard_size)
 
         sspec = jax.tree.map(
-            lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), state)
+            lambda leaf: P(vaxes, *([None] * (leaf.ndim - 1))), state)
 
         def update_local(st, is_insert, uu, vv, ww, active):
-            lo = shard_index(mesh) * shard_size
+            lo = shard_index(mesh, vaxes) * shard_size
             owned = (uu >= lo) & (uu < lo + shard_size) & active
             lu = jnp.where(owned, uu - lo, 0)
             st, stats = bk.apply_updates(st, lcfg, is_insert, lu, vv, ww,
                                          active=owned)
             return st, jax.tree.map(
-                lambda t: jax.lax.psum(t, axis_name=axes), stats)
+                lambda t: jax.lax.psum(t, axis_name=vaxes), stats)
 
         smap_upd = shard_map(update_local, mesh=mesh,
                              in_specs=(sspec, P(), P(), P(), P(), P()),

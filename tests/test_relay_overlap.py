@@ -1,0 +1,367 @@
+"""Overlapped relay rounds + the 2D vertex × walker mesh (DESIGN.md
+§10/§13) and the tight ``round_bound`` termination contract.
+
+The tentpole pins: the overlapped schedule (exchange of round g's
+movers in flight while round g+1's segment walks the stay-locals) is
+BIT-IDENTICAL to the bulk-synchronous relay and to the single-shard
+walk — schedule invariance of the (seed, wid, t) counter PRNG made
+falsifiable — and an (S_v × S_w) mesh with walker slots partitioned
+across the walker axis passes the same pin.  Multi-device cases need
+the 8 fake host devices of the walk-relay CI job.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walks
+from repro.core.backend import get_backend
+from repro.core.dyngraph import BingoConfig, from_edges
+from repro.distributed.chaos import ChaosSchedule, run_chaos_relay
+from repro.distributed.relay import (RelayIntegrityError, make_relay,
+                                     round_bound, slot_count)
+from repro.kernels.ops import seed_from_key
+from tests.test_walk_relay import _state
+
+DEVS = len(jax.devices())
+multi = pytest.mark.skipif(
+    DEVS < 8, reason="needs 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _run(st, cfg, params, walkers, seed, u=None, *, num_shards=1,
+         mesh_shape=None, walker_axes=(), backend="pallas", **kw):
+    """Relay over a 1D (num_shards,) or explicit 2D host mesh."""
+    if mesh_shape is None:
+        mesh = jax.make_mesh((num_shards,), ("data",))
+    else:
+        mesh = jax.make_mesh(mesh_shape, ("data", "walker"))
+    relay = make_relay(get_backend(backend), cfg, params, mesh,
+                       walker_axes=walker_axes, **kw)
+    return relay(st, walkers, seed, u)
+
+
+# -- tentpole (a): overlapped == bulk == single-shard ---------------------
+
+@pytest.mark.parametrize("kind", ["deepwalk", "ppr", "simple"])
+@pytest.mark.parametrize("num_shards", [
+    1, pytest.param(8, marks=multi)])
+def test_overlap_bitexact_fed_uniforms(kind, num_shards):
+    """Fed uniforms: the overlapped relay == the bulk relay == the
+    single-shard random_walk, bit-for-bit, for every whole-walk kind.
+    The overlapped schedule changes WHEN walkers walk, never WHERE."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(
+        kind=kind, length=L, stop_prob=0.1 if kind == "ppr" else 0.0)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas", uniforms=u)
+    seed = seed_from_key(key)
+    bulk, r_bulk, _ = _run(st, cfg, params, walkers, seed, u,
+                           num_shards=num_shards)
+    over, r_over, _ = _run(st, cfg, params, walkers, seed, u,
+                           num_shards=num_shards, overlap=True)
+    np.testing.assert_array_equal(np.asarray(over), np.asarray(bulk))
+    np.testing.assert_array_equal(np.asarray(over), np.asarray(single))
+    if num_shards == 1:
+        # no movers anywhere: the overlapped loop also exits in 1 round
+        assert int(r_over) == 1 and int(r_bulk) == 1
+
+
+@pytest.mark.parametrize("num_shards", [1, pytest.param(8, marks=multi)])
+def test_overlap_bitexact_hash_prng(num_shards):
+    """Counter-PRNG mode (no fed uniforms): still bit-identical — the
+    (seed, wid, t) stream follows the walker across shards AND across
+    the overlapped schedule's extra round of crossing latency."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(7)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    seed = seed_from_key(key)
+    over, _, _ = _run(st, cfg, params, walkers, seed,
+                      num_shards=num_shards, overlap=True)
+    np.testing.assert_array_equal(np.asarray(over), np.asarray(single))
+
+
+@multi
+def test_overlap_cap1_overflow_requeue_stays_exact():
+    """cap=1 starves the double-buffered mailboxes: in-flight records
+    re-queue through the outbox/pinned-slot buffers for many extra
+    rounds, and the result is still bit-exact — conservation survives
+    overflow on the overlapped transport."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas", uniforms=u)
+    seed = seed_from_key(key)
+    wide, r_wide, _ = _run(st, cfg, params, walkers, seed, u,
+                           num_shards=8, overlap=True)
+    tight, r_tight, ovf = _run(st, cfg, params, walkers, seed, u,
+                               num_shards=8, overlap=True, mailbox_cap=1)
+    np.testing.assert_array_equal(np.asarray(tight), np.asarray(single))
+    np.testing.assert_array_equal(np.asarray(wide), np.asarray(single))
+    assert int(ovf) > 0 and int(r_tight) > int(r_wide)
+
+
+@multi
+def test_overlap_reference_backend_matches_pallas():
+    st, cfg = _state(base_log2=2, fp=True)
+    B, L = 16, 8
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    seed = jnp.array([42], jnp.int32)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    p_pal, _, _ = _run(st, cfg, params, walkers, seed, num_shards=8,
+                       overlap=True, backend="pallas")
+    p_ref, _, _ = _run(st, cfg, params, walkers, seed, num_shards=8,
+                       overlap=True, backend="reference")
+    np.testing.assert_array_equal(np.asarray(p_pal), np.asarray(p_ref))
+
+
+# -- tentpole (b): the 2D vertex × walker mesh ----------------------------
+
+@pytest.mark.parametrize("mesh_shape", [
+    pytest.param((2, 4), marks=multi), pytest.param((4, 2), marks=multi),
+    (1, 1)])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_mesh2d_bitexact(mesh_shape, overlap):
+    """(S_v × S_w) factorizations — graph sharded over S_v, walker
+    slots partitioned over S_w — produce paths bit-identical to the
+    single-shard walk, bulk and overlapped, fed uniforms.  PRNG keys
+    stay GLOBAL wids, so the factorization is invisible in the output."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas", uniforms=u)
+    paths, rounds, ovf = _run(st, cfg, params, walkers, seed_from_key(key),
+                              u, mesh_shape=mesh_shape,
+                              walker_axes=("walker",), overlap=overlap)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    assert int(rounds) >= 1
+
+
+@multi
+def test_mesh2d_hash_prng_and_walker_partition():
+    """Hash-PRNG 2×4 mesh pin + the partition claim made measurable:
+    with walker slots split over S_w=4 groups, each group's compacted
+    pool is sized by W/S_w — the diagnostics peak can never reach the
+    1D relay's per-shard occupancy bound."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(9)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    paths, _r, _o, peak = _run(
+        st, cfg, params, walkers, seed_from_key(key), mesh_shape=(2, 4),
+        walker_axes=("walker",), overlap=True, diagnostics=True)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    # per-group pools hold Wg = B/4 walkers over S_v = 2 vertex shards
+    assert int(peak) <= slot_count(B // 4, 2)
+    assert slot_count(B // 4, 2) < B
+
+
+@multi
+def test_mesh2d_rejects_ragged_walker_groups():
+    st, cfg = _state()
+    params = walks.WalkParams(kind="deepwalk", length=4)
+    mesh = jax.make_mesh((2, 4), ("data", "walker"))
+    relay = make_relay(get_backend("pallas"), cfg, params, mesh,
+                       walker_axes=("walker",))
+    with pytest.raises(ValueError, match="walker group"):
+        relay(st, jnp.zeros((22,), jnp.int32), jnp.array([1], jnp.int32))
+    with pytest.raises(ValueError, match="vertex axis"):
+        make_relay(get_backend("pallas"), cfg, params, mesh,
+                   walker_axes=("data", "walker"))
+    with pytest.raises(ValueError, match="not in mesh"):
+        make_relay(get_backend("pallas"), cfg, params, mesh,
+                   walker_axes=("nope",))
+
+
+# -- chaos harness against the overlapped transport -----------------------
+
+@multi
+@pytest.mark.parametrize("sched", [
+    ChaosSchedule(seed=2, dup=0.3),
+    ChaosSchedule(seed=1, delay=0.3),
+    ChaosSchedule(seed=4, dup=0.2, delay=0.2, mailbox_cap=1,
+                  path_faults=True),
+], ids=["dup", "delay", "starve+dup+delay+pathfaults"])
+def test_chaos_recoverable_overlap_bitexact(sched):
+    """The §11 recovery contract is schedule-independent: recoverable
+    fault streams against the OVERLAPPED transport still conserve every
+    walker and pin bit-identical to the fault-free single-shard walk."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    mesh = jax.make_mesh((8,), ("data",))
+    paths, report = run_chaos_relay(
+        get_backend("pallas"), cfg, params, mesh, st, walkers,
+        seed_from_key(key), sched, full_length=True, overlap=True)
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    assert report.lost == 0 and report.pending_at_exit == 0
+
+
+@multi
+def test_chaos_drops_raise_on_overlapped_transport():
+    st, cfg = _state()
+    walkers = jnp.arange(24, dtype=jnp.int32) % cfg.num_vertices
+    params = walks.WalkParams(kind="deepwalk", length=10)
+    mesh = jax.make_mesh((8,), ("data",))
+    with pytest.raises(RelayIntegrityError) as exc:
+        run_chaos_relay(get_backend("pallas"), cfg, params, mesh, st,
+                        walkers, seed_from_key(jax.random.key(0)),
+                        ChaosSchedule(seed=5, drop=0.15), overlap=True)
+    rep = exc.value.report
+    assert rep.lost > 0 and "lost" in str(exc.value)
+
+
+@multi
+def test_chaos_recoverable_on_2d_mesh():
+    """Faults on a 2×4 mesh: each (group, vertex-shard) pair draws its
+    own deterministic fault stream; recovery still bit-exact."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    mesh = jax.make_mesh((2, 4), ("data", "walker"))
+    paths, report = run_chaos_relay(
+        get_backend("pallas"), cfg, params, mesh, st, walkers,
+        seed_from_key(key), ChaosSchedule(seed=3, dup=0.25, delay=0.2),
+        full_length=True, overlap=True, walker_axes=("walker",))
+    np.testing.assert_array_equal(np.asarray(paths), np.asarray(single))
+    assert report.lost == 0 and report.pending_at_exit == 0
+
+
+# -- satellite: the tight round bound -------------------------------------
+
+def test_round_bound_is_tight_at_scale():
+    """The FULL-sizing bound must be orders of magnitude below the old
+    2·W·(L+2) default — the satellite's whole point: a hung transport
+    surfaces in minutes, not hours."""
+    W, L, S = 4_194_304, 80, 256
+    old = 2 * W * (L + 2) + 8
+    new = round_bound(W, L, S)
+    assert new * 100 < old            # >= 100x tighter
+    assert new > L                    # still a real safety margin
+    # starved mailboxes legitimately need more rounds; overlap adds lag
+    assert round_bound(64, 8, 8, mailbox_cap=1) > round_bound(64, 8, 8)
+    assert round_bound(64, 8, 8, overlap=True) > round_bound(64, 8, 8)
+
+
+@multi
+def test_round_bound_covers_observed_rounds():
+    """Safety direction: observed rounds — including the cap=1 funnel,
+    the worst starvation the suite exercises — stay under the bound."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(0)
+    u = jax.random.uniform(key, (L, B, 6))
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    seed = seed_from_key(key)
+    for overlap in (False, True):
+        _, r, _ = _run(st, cfg, params, walkers, seed, u, num_shards=8,
+                       overlap=overlap, mailbox_cap=1)
+        assert int(r) < round_bound(B, L, 8, mailbox_cap=1,
+                                    overlap=overlap)
+        _, r, _ = _run(st, cfg, params, walkers, seed, u, num_shards=8,
+                       overlap=overlap)
+        assert int(r) < round_bound(B, L, 8, overlap=overlap)
+
+
+def test_strict_mode_raises_pending_census_on_bound_trip():
+    """strict=True + a tripped max_rounds: the relay raises
+    RelayIntegrityError carrying the pending census instead of
+    returning silently truncated paths."""
+    st, cfg = _state()
+    B = 16
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    params = walks.WalkParams(kind="deepwalk", length=6)
+    seed = jnp.array([3], jnp.int32)
+    with pytest.raises(RelayIntegrityError) as exc:
+        _run(st, cfg, params, walkers, seed, num_shards=1, strict=True,
+             max_rounds=0)
+    rep = exc.value.report
+    assert rep.pending_at_exit == B and rep.max_rounds == 0
+    assert "pending at exit" in str(exc.value)
+    # a clean strict run returns the unchanged 3-tuple API
+    out = _run(st, cfg, params, walkers, seed, num_shards=1, strict=True)
+    assert len(out) == 3 and int(out[1]) == 1
+
+
+@multi
+def test_engine_serves_on_2d_mesh():
+    """DynamicWalkEngine on a 2×4 vertex × walker mesh (overlapped
+    relay, the production default): ingest keeps the S_w table replicas
+    in lockstep (stats counted once, not S_w times) and served paths
+    match the single-device engine bit-for-bit."""
+    from repro.serve.dynwalk import DynamicWalkEngine
+    st, cfg = _state()
+    cfg = dataclasses.replace(cfg, backend="pallas")
+    params = walks.WalkParams(kind="deepwalk", length=8)
+    mesh = jax.make_mesh((2, 4), ("data", "walker"))
+    eng_s = DynamicWalkEngine(jax.tree.map(jnp.copy, st), cfg, params,
+                              backend="pallas", mesh=mesh,
+                              walker_axes=("walker",))
+    eng_1 = DynamicWalkEngine(jax.tree.map(jnp.copy, st), cfg, params,
+                              backend="pallas")
+    ins = jnp.array([True, True, False, True])
+    uu = jnp.array([3, 17, 2, 29], jnp.int32)
+    vv = jnp.array([9, 4, 11, 1], jnp.int32)
+    ww = jnp.array([2, 5, 1, 3], jnp.int32)
+    stats_s = eng_s.ingest(ins, uu, vv, ww)
+    stats_1 = eng_1.ingest(ins, uu, vv, ww)
+    for a, b in zip(jax.tree.leaves(stats_s), jax.tree.leaves(stats_1)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    starts = jnp.arange(16, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(9)
+    np.testing.assert_array_equal(
+        np.asarray(eng_s.walk(starts, key=key)),
+        np.asarray(eng_1.walk(starts, key=key)))
+
+
+@multi
+def test_overlap_cohorts_reach_segment_unchanged():
+    """cfg.cohorts threads through the overlapped relay exactly like
+    the bulk one: K=2 == K=1 == single-shard."""
+    st, cfg = _state()
+    B, L = 24, 10
+    walkers = jnp.arange(B, dtype=jnp.int32) % cfg.num_vertices
+    key = jax.random.key(11)
+    params = walks.WalkParams(kind="deepwalk", length=L)
+    single = walks.random_walk(st, cfg, walkers, key, params,
+                               backend="pallas")
+    outs = {}
+    for K in (1, 2):
+        cfg_k = dataclasses.replace(cfg, cohorts=K)
+        paths, _, _ = _run(st, cfg_k, params, walkers, seed_from_key(key),
+                           num_shards=8, overlap=True)
+        outs[K] = np.asarray(paths)
+    np.testing.assert_array_equal(outs[2], outs[1])
+    np.testing.assert_array_equal(outs[2], np.asarray(single))

@@ -1,0 +1,55 @@
+"""launch/report.py comparison rules: same-stamp only, and now also
+same-mesh-factorization only (DESIGN.md §13) — a 64×4 relay number
+against a 16×16 one times different collectives and table replication,
+so it must be refused like a cross-stamp compare, not averaged into a
+throughput delta."""
+
+from repro.launch.report import _mesh_fact, _snapshots, _stamp
+
+
+def _snap(cases, extras=None, env=None, sizing=None):
+    return {"cases": cases, "extras": extras or {},
+            "env": env or {"platform": "cpu", "interpret": False,
+                           "device_count": 8},
+            "sizing": sizing or {"walkers": 64}}
+
+
+def test_mesh_fact_reads_extras():
+    s = _snap({"deepwalk-relay": 1.0},
+              extras={"deepwalk-relay.mesh_sv": 8,
+                      "deepwalk-relay.mesh_sw": 1,
+                      "deepwalk-relay.round_ms": 1.5})
+    assert _mesh_fact(s, "deepwalk-relay") == (8, 1)
+    # unstamped case (predates factorized meshes) -> None, which only
+    # compares equal to another unstamped case
+    assert _mesh_fact(s, "deepwalk-pallas-fused") is None
+
+
+def test_cross_factorization_compare_refused():
+    """The refusal rule itself: equal stamps, equal case names, but the
+    factorization moved — _mesh_fact values differ, so perf_deltas's
+    `!=` gate skips the pair (and an unstamped old vs a stamped new is
+    refused too)."""
+    old = _snap({"deepwalk-relay": 1.0},
+                extras={"deepwalk-relay.mesh_sv": 16,
+                        "deepwalk-relay.mesh_sw": 16})
+    new = _snap({"deepwalk-relay": 9.0},
+                extras={"deepwalk-relay.mesh_sv": 64,
+                        "deepwalk-relay.mesh_sw": 4})
+    assert _stamp(old) == _stamp(new)            # same stamp...
+    assert _mesh_fact(old, "deepwalk-relay") \
+        != _mesh_fact(new, "deepwalk-relay")     # ...still refused
+    unstamped = _snap({"deepwalk-relay": 1.0})
+    assert _mesh_fact(unstamped, "deepwalk-relay") \
+        != _mesh_fact(new, "deepwalk-relay")
+    # identical factorization compares equal -> the pair is diffable
+    assert _mesh_fact(new, "deepwalk-relay") \
+        == _mesh_fact(_snap({}, extras=dict(new["extras"])),
+                      "deepwalk-relay")
+
+
+def test_snapshots_handles_both_layouts():
+    assert _snapshots({"snapshots": [_snap({}), _snap({})]}) \
+        and len(_snapshots({"snapshots": [_snap({})]})) == 1
+    assert len(_snapshots(_snap({"a": 1.0}))) == 1
+    assert _snapshots({}) == []
