@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from benchmarks import common
 from benchmarks.common import record, record_sizing
 from repro.core.dyngraph import BingoConfig, from_edges
+from repro.core.updates import R_CAPACITY
 from repro.core.walks import WalkParams
 from repro.graph.rmat import degree_bias, rmat_edges
 from repro.graph.streams import make_update_stream
@@ -60,12 +61,14 @@ def _sizing():
                 update_lanes=64)
 
 
-def _build(sz, guard):
+def _build(sz, guard, ladder=False):
     V = 1 << sz["scale"]
     src, dst = rmat_edges(sz["scale"], 8, seed=0)
     w = degree_bias(src, dst, V, bias_bits=12)
-    cfg = BingoConfig(num_vertices=V, capacity=sz["capacity"],
-                      bias_bits=12, backend="reference")
+    C = sz["capacity"]
+    cfg = BingoConfig(num_vertices=V, capacity=C,
+                      bias_bits=12, backend="reference",
+                      capacity_ladder=(C, 2 * C) if ladder else ())
     n_upd = max(2, sz["events"] // 3)
     stream = make_update_stream(src, dst, w,
                                 batch_size=sz["update_batch"],
@@ -133,8 +136,22 @@ def _measure(elapsed, walk_lanes, upd_lanes, lat_s, length):
             "p99_walk_ms": float(np.percentile(lat, 99))}
 
 
-def _run_serial(sz, guard, events):
-    eng, stream, V = _build(sz, guard)
+def _growth_extras(eng, upd_lanes):
+    """Growth-edge loss rate + regrow counts (DESIGN.md §14): an edge
+    is *lost* if a capacity spill was quarantined or still sits pending
+    when the stream ends — the ladder side must report 0.0 where the
+    fixed-capacity engine sheds its hub growth."""
+    g = eng.guard
+    lost = 0
+    if g is not None:
+        lost = sum(q.reason == R_CAPACITY for q in g.quarantine) \
+            + len(g.pending)
+    return {"growth_loss_rate": lost / max(upd_lanes, 1),
+            "regrows": float(sum(eng.regrow_counts))}
+
+
+def _run_serial(sz, guard, events, ladder=False):
+    eng, stream, V = _build(sz, guard, ladder)
     _warm(eng, sz, stream)
     lat, walk_lanes, upd_lanes = [], 0, 0
     t0 = time.perf_counter()
@@ -154,11 +171,13 @@ def _run_serial(sz, guard, events):
             walk_lanes += len(payload)
     elapsed = time.perf_counter() - t0
     assert int(eng.walks_served) == walk_lanes
-    return _measure(elapsed, walk_lanes, upd_lanes, lat, sz["length"])
+    m = _measure(elapsed, walk_lanes, upd_lanes, lat, sz["length"])
+    m.update(_growth_extras(eng, upd_lanes))
+    return m
 
 
-def _run_scheduler(sz, guard, events):
-    eng, stream, V = _build(sz, guard)
+def _run_scheduler(sz, guard, events, ladder=False):
+    eng, stream, V = _build(sz, guard, ladder)
     _warm(eng, sz, stream)
     sched = ServingScheduler(eng, SchedulerConfig(
         update_lanes=sz["update_lanes"], max_update_delay=4,
@@ -184,8 +203,10 @@ def _run_scheduler(sz, guard, events):
     assert int(eng.walks_served) == walk_lanes
     assert len(done) == sum(1 for b in events for k, _ in b
                             if k == "walk")
-    return _measure(elapsed, walk_lanes, upd_lanes,
-                    [w.latency_s for w in done], sz["length"])
+    m = _measure(elapsed, walk_lanes, upd_lanes,
+                 [w.latency_s for w in done], sz["length"])
+    m.update(_growth_extras(eng, upd_lanes))
+    return m
 
 
 REPS = 2   # best sustained rep wins: one timer-noise spike on this
@@ -204,3 +225,15 @@ def main() -> None:
                        key=lambda m: m["walks_per_s"])
             for metric, value in best.items():
                 record(BENCH, f"{side}/{tag}", metric, value)
+    # Capacity-ladder contrast (DESIGN.md §14), guard=on, one rep: the
+    # scheduler regrows at its drain points and must report a 0.0
+    # growth-edge loss rate; the serial loop never escalates, so any
+    # capacity spill the stream's deletes can't unblock stays lost.
+    # (The ladder scheduler run pays its tier-C' compiles on the clock,
+    # so its walks/s is informational, not comparable to the rows
+    # above.)
+    for side, run in (("serial", _run_serial),
+                      ("scheduler", _run_scheduler)):
+        m = run(sz, True, events, ladder=True)
+        for metric, value in m.items():
+            record(BENCH, f"{side}/ladder", metric, value)

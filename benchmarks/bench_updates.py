@@ -15,6 +15,10 @@ no ``BingoState`` copies.  ``benchmarks/run.py`` persists the rows into
 
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
 from benchmarks import common
 from benchmarks.common import (build_state, dataset_stream, record,
                                record_sizing, update_rate)
@@ -27,6 +31,67 @@ BACKENDS = ("reference", "pallas")
 
 MICRO_SCALE = 7
 MICRO_BATCH = 64
+
+
+def _growth_rows(scale):
+    """Hub-growth ingestion through the capacity ladder (DESIGN.md §14).
+
+    An insertion-heavy stream drives hub vertices past C.  The
+    ``growth-ladder`` row escalates via ``engine.want_regrow()`` /
+    ``engine.regrow()`` and must report a 0.0 growth-edge loss rate
+    (plus how many regrows that took); the ``growth-fixed`` contrast
+    row ingests the same rounds at a pinned C and records the loss the
+    pre-ladder engine sheds (quarantined + still-pending spills).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.dyngraph import BingoConfig, from_edges
+    from repro.core.updates import R_CAPACITY
+    from repro.core.walks import WalkParams
+    from repro.serve.dynwalk import DynamicWalkEngine
+
+    V, C, lanes, rounds = 1 << scale, 8, 32, 8
+    rng = np.random.default_rng(11)
+    init = (np.arange(V, dtype=np.int32),
+            ((np.arange(V) + 1) % V).astype(np.int32),
+            np.ones(V, np.int32))
+    hubs = np.array([0, 1, 2, 3], np.int32)
+    batches = []
+    for r in range(rounds):
+        # half the lanes pile onto 4 hubs (deg grows 1+4/round, past
+        # two rungs of the ladder); one delete per round arms the
+        # fixed engine's retry path so its spills burn to quarantine
+        u = rng.integers(4, V, lanes).astype(np.int32)
+        u[:lanes // 2] = hubs[rng.integers(0, 4, lanes // 2)]
+        v = rng.integers(0, V, lanes).astype(np.int32)
+        ins = np.ones(lanes, bool)
+        ins[-1] = False
+        u[-1], v[-1] = r + 4, (r + 5) % V
+        batches.append((jnp.asarray(ins), jnp.asarray(u),
+                        jnp.asarray(v), jnp.ones(lanes, jnp.int32)))
+
+    for tag, ladder in (("growth-ladder", (C, 2 * C, 4 * C, 8 * C)),
+                        ("growth-fixed", ())):
+        cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=8,
+                          backend="reference", capacity_ladder=ladder)
+        eng = DynamicWalkEngine(from_edges(cfg, *init), cfg,
+                                WalkParams(kind="deepwalk", length=4),
+                                guard=True)
+        t0 = time.perf_counter()
+        for b in batches:
+            eng.ingest(*b)
+            while ladder and eng.want_regrow():
+                eng.regrow()
+        elapsed = time.perf_counter() - t0
+        g = eng.guard
+        g.check_conservation()
+        lost = sum(q.reason == R_CAPACITY for q in g.quarantine) \
+            + len(g.pending)
+        record("updates", tag, "updates_per_s",
+               lanes * rounds / max(elapsed, 1e-9))
+        record("updates", tag, "growth_loss_rate",
+               lost / (lanes * rounds))
+        record("updates", tag, "regrows", float(sum(eng.regrow_counts)))
 
 
 def main():
@@ -50,6 +115,7 @@ def main():
             rate = update_rate(
                 st, cfg, rounds_on_device(stream), backend=backend)
             record("updates", f"{mode}-{backend}", "updates_per_s", rate)
+    _growth_rows(scale)
 
 
 if __name__ == "__main__":

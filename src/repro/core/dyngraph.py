@@ -37,7 +37,7 @@ __all__ = [
     "EMPTY", "DENSE", "ONE", "SPARSE", "REGULAR",
     "BingoConfig", "BingoState",
     "classify", "build_vertex_groups", "build_itable_rows",
-    "empty_state", "from_edges", "refresh_vertices",
+    "empty_state", "from_edges", "refresh_vertices", "regrow_state",
 ]
 
 # Group type codes (Eq. 9).  Precedence follows the paper's listing:
@@ -64,6 +64,41 @@ class BingoConfig:
     cohorts: int = 1              # walk-megakernel cohort interleaving
                                   # factor K (DESIGN.md §8) — bit-exact
                                   # for every K; purely a perf knob
+    capacity_ladder: tuple = ()   # pre-declared capacity tiers (C, 2C, …)
+                                  # for live regrowth (DESIGN.md §14);
+                                  # () = fixed capacity, no escalation
+
+    def __post_init__(self):
+        if not isinstance(self.capacity_ladder, tuple):
+            object.__setattr__(self, "capacity_ladder",
+                               tuple(int(c) for c in self.capacity_ladder))
+        lad = self.capacity_ladder
+        if lad:
+            if any(b <= a for a, b in zip(lad, lad[1:])):
+                raise ValueError(
+                    f"capacity_ladder must be strictly increasing: {lad}")
+            if self.capacity not in lad:
+                raise ValueError(
+                    f"capacity {self.capacity} is not a rung of "
+                    f"capacity_ladder {lad} — the ladder must be declared "
+                    "up front so every tier's programs are known")
+
+    @property
+    def ladder(self) -> tuple:
+        """The capacity tiers, always non-empty (``(capacity,)`` when no
+        ladder was declared)."""
+        return self.capacity_ladder or (self.capacity,)
+
+    @property
+    def tier(self) -> int:
+        """Index of the current capacity in the ladder."""
+        return self.ladder.index(self.capacity)
+
+    def tier_config(self, t: int) -> "BingoConfig":
+        """The config at ladder rung ``t`` — identical in every field but
+        ``capacity`` (the ladder itself is carried unchanged, so tier
+        configs of one engine share one ladder)."""
+        return dataclasses.replace(self, capacity=self.ladder[t])
 
     @property
     def num_radix(self) -> int:
@@ -280,3 +315,60 @@ def refresh_vertices(state: BingoState, cfg: BingoConfig, verts,
     if state.ginv is not None:
         st = st._replace(ginv=state.ginv.at[verts].set(ginv, mode="drop"))
     return st
+
+
+def regrow_state(state: BingoState, cfg: BingoConfig,
+                 cfg_next: BingoConfig, chunk: int = 4096) -> BingoState:
+    """Migrate a state from capacity ``cfg.capacity`` to the larger
+    ``cfg_next.capacity`` — the ladder-escalation step (DESIGN.md §14).
+
+    The adjacency rows are slot-compact, so growth is a pure pad:
+    ``nbr/bias/frac`` extend from ``(V, C)`` to ``(V, C')`` with the
+    empty-slot sentinels and ``deg`` is unchanged.  Every derived table
+    (``gmem/ginv/gsize/digitsum/gtype/wdec/itable``) is a pure function
+    of ``(bias_row, frac_row, deg, cfg)``, so rebuilding them at
+    ``cfg_next`` yields *bit-identical* output to ``from_edges`` at
+    ``C'`` over the same edges listed in row order — the
+    rebuild-equivalence pin (``tests/test_regrow.py``), which makes all
+    future walks bit-identical by the counter PRNG's shape-independence.
+
+    Pure jnp (jit- and GSPMD-friendly: in sharded mode the caller runs
+    it per shard with shard-local configs).  Large V rebuilds in
+    ``chunk``-row tiles like ``refresh_vertices`` so the ``(V, C', K)``
+    digit intermediates never materialize at scale.
+    """
+    C, C2 = cfg.capacity, cfg_next.capacity
+    if C2 <= C:
+        raise ValueError(f"regrow must grow: C'={C2} <= C={C}")
+    if cfg_next.num_vertices != cfg.num_vertices or (
+            cfg_next.bias_bits, cfg_next.base_log2, cfg_next.adaptive,
+            cfg_next.fp_bias) != (cfg.bias_bits, cfg.base_log2,
+                                  cfg.adaptive, cfg.fp_bias):
+        raise ValueError("regrow may only change capacity; every other "
+                         "sampling-space field must match")
+    V = cfg.num_vertices
+    pad = ((0, 0), (0, C2 - C))
+    nbr = jnp.pad(state.nbr, pad, constant_values=-1)
+    bias = jnp.pad(state.bias, pad, constant_values=0)
+    frac = jnp.pad(state.frac, pad, constant_values=0.0)
+    deg = state.deg
+
+    def build_rows(args):
+        br, fr, dg = args
+        return jax.vmap(
+            lambda b, f, d: build_vertex_groups(cfg_next, b, f, d)
+        )(br, fr, dg)
+
+    if V > chunk and V % chunk == 0:
+        shape = (V // chunk, chunk)
+        outs = jax.lax.map(build_rows, (bias.reshape(shape + (C2,)),
+                                        frac.reshape(shape + (C2,)),
+                                        deg.reshape(shape)))
+        gmem, ginv, gsize, digitsum, gtype, wdec = jax.tree.map(
+            lambda t: t.reshape((V,) + t.shape[2:]), outs)
+    else:
+        gmem, ginv, gsize, digitsum, gtype, wdec = build_rows(
+            (bias, frac, deg))
+    itable = build_itable_rows(cfg_next, digitsum, wdec)
+    return BingoState(nbr, bias, frac, deg, gmem, ginv, gsize, digitsum,
+                      wdec, gtype, itable)

@@ -39,12 +39,19 @@ class Violation(NamedTuple):
 
 
 # Rules covered by the device-side subset, in output order.
+# ``at_capacity`` is a *pressure* rule, not a corruption rule: it counts
+# rows sitting at ``deg == capacity`` while inserts are pending against
+# the state (``pending_inserts > 0``) — the loss-imminent condition the
+# §14 capacity ladder exists to relieve.  With the default
+# ``pending_inserts=0`` it never fires, so healthy-state == all-zero
+# audits are unchanged.
 DEVICE_RULES = ("deg_range", "live_nbr", "stale_tail", "bias_positive",
-                "digitsum", "gsize", "wdec", "gtype")
+                "digitsum", "gsize", "wdec", "gtype", "at_capacity")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def check_state_device(state, cfg: BingoConfig) -> jax.Array:
+def check_state_device(state, cfg: BingoConfig,
+                       pending_inserts=0) -> jax.Array:
     """Per-rule violating-vertex counts, ``(len(DEVICE_RULES),)`` int32.
 
     All-zero means the row tables and per-vertex counters are mutually
@@ -79,13 +86,17 @@ def check_state_device(state, cfg: BingoConfig) -> jax.Array:
     bad_type = jnp.any(
         state.gtype != classify(state.gsize, deg, cfg), axis=-1)
 
+    pend = jnp.asarray(pending_inserts, jnp.int32)
+    bad_cap = (deg == C) & (pend > 0)
+
     counts = [bad_deg, bad_live, bad_tail, bad_bias,
-              bad_dsum, bad_gsz, bad_wdec, bad_type]
+              bad_dsum, bad_gsz, bad_wdec, bad_type, bad_cap]
     return jnp.stack([jnp.sum(b, dtype=jnp.int32) for b in counts])
 
 
 def check_state(state, cfg: BingoConfig, vertices=None, *,
-                assert_ok: bool = True) -> List[Violation]:
+                assert_ok: bool = True,
+                pending_inserts: int = 0) -> List[Violation]:
     """Exhaustive host-side audit; returns the full violation report.
 
     ``assert_ok=True`` raises ``AssertionError`` (listing up to the
@@ -143,6 +154,10 @@ def check_state(state, cfg: BingoConfig, vertices=None, *,
                 f"{(digs != 0).sum(0).tolist()}")
         if not np.isclose(wdec[u], frac[u, :d].sum(), atol=1e-4):
             bad(u, -1, "wdec", f"{wdec[u]} vs recomputed {frac[u, :d].sum()}")
+        if pending_inserts > 0 and d == C:
+            bad(u, -1, "at_capacity",
+                f"row full at deg == C == {C} with {pending_inserts} "
+                "insert(s) pending — regrow (DESIGN.md §14) or lose them")
 
         for k in range(K):
             sz = int(gsize[u, k])

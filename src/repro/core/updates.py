@@ -71,6 +71,11 @@ class UpdateStats(NamedTuple):
     del_applied: jax.Array    # () int32
     transitions: jax.Array    # (5, 5) int32 group-type transition counts
     rejected: jax.Array       # (NUM_REASONS,) int32 per-reason reject counts
+    # Capacity-pressure watermark max(deg)/capacity after the round
+    # (DESIGN.md §14) — attached by the serving engine as a device
+    # scalar (never a host sync); None on the raw kernel paths, and as
+    # None it is not a pytree leaf, so stats trees stay comparable.
+    max_fill: Optional[jax.Array] = None
 
 
 def _locate(state: BingoState, cfg: BingoConfig, u, slot):

@@ -45,13 +45,15 @@ import jax.numpy as jnp
 
 # RelayIntegrityError lives in relay.py now (the strict-mode max_rounds
 # trip raises it too); re-exported here for the existing callers.
+from repro.core.dyngraph import regrow_state
 from repro.distributed.relay import (RelayIntegrityError, make_relay,
                                      shard_index)
 from repro.distributed.walker_exchange import (exchange_walkers,
                                                merge_into_free)
 
 __all__ = ["ChaosSchedule", "ChaosReport", "RelayIntegrityError",
-           "audit_paths", "make_chaos_relay", "run_chaos_relay"]
+           "audit_paths", "make_chaos_relay", "run_chaos_relay",
+           "run_chaos_across_regrow"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,3 +276,44 @@ def run_chaos_relay(bk, cfg, params, mesh, state, walkers, seed,
     if report.lost or report.pending_at_exit or problems:
         raise RelayIntegrityError(report, problems)
     return paths, report
+
+
+def run_chaos_across_regrow(bk, cfg, params, mesh, state, walkers, seeds,
+                            sched: ChaosSchedule, *,
+                            max_rounds: Optional[int] = None,
+                            slot_slack: Optional[int] = None,
+                            path_cap: Optional[int] = None,
+                            full_length: bool = False,
+                            overlap: bool = False, walker_axes=()):
+    """Drive the chaos transport across a capacity-regrow boundary.
+
+    One chaos relay at the state's current ladder tier, then the
+    rebuild-equivalent ``regrow_state`` escalation (DESIGN.md §14),
+    then a second chaos relay at the grown tier — the same schedule
+    draws a fresh deterministic fault stream per seed.  Returns
+    ``(paths0, paths1, report0, report1, grown_state)``; either side
+    breaking conservation raises ``RelayIntegrityError`` exactly as
+    ``run_chaos_relay`` does.  The §14 claim this makes falsifiable:
+    recoverable faults (dup / delay / cap-starve) stay bit-exact
+    against the fault-free relay on BOTH sides of the boundary — the
+    migration changes buffer shapes, never walker draws — and a
+    transport killed around the boundary still fails loudly.
+    """
+    if cfg.tier + 1 >= len(cfg.ladder):
+        raise ValueError(
+            f"no tier above capacity {cfg.capacity} in ladder "
+            f"{cfg.ladder}")
+    cfg_next = cfg.tier_config(cfg.tier + 1)
+    grown = regrow_state(state, cfg, cfg_next)   # pure — before any
+    s0, s1 = seeds                               # donation downstream
+    paths0, report0 = run_chaos_relay(
+        bk, cfg, params, mesh, state, walkers, s0, sched,
+        max_rounds=max_rounds, slot_slack=slot_slack, path_cap=path_cap,
+        full_length=full_length, overlap=overlap,
+        walker_axes=walker_axes)
+    paths1, report1 = run_chaos_relay(
+        bk, cfg_next, params, mesh, grown, walkers, s1, sched,
+        max_rounds=max_rounds, slot_slack=slot_slack, path_cap=path_cap,
+        full_length=full_length, overlap=overlap,
+        walker_axes=walker_axes)
+    return paths0, paths1, report0, report1, grown

@@ -67,8 +67,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         # multi-pod pass proves the pod axis shards; the roofline table is
         # single-pod only, so multi-pod lowers with rolled scans (fast).
         cell = build_cell(arch, shape_name, mesh, fast=multi_pod)
-        if overrides:
-            cell.meta.setdefault("overrides", {}).update(overrides)
+    if overrides:
+        cell.meta.setdefault("overrides", {}).update(overrides)
 
     with mesh:
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
@@ -123,22 +123,29 @@ def main():
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     failures = []
     if args.all:
-        todo = [(a, c["shape"].name)
+        todo = [(a, c["shape"].name, None)
                 for a, cs in CELLS.items() for c in cs if not c["skip"]
                 if args.arch_filter in a]
-        todo.append(("bingo-walk", "walk_step"))
-        todo.append(("bingo-walk", "walk_whole"))
-        todo.append(("bingo-walk", "walk_relay"))
-        todo.append(("bingo-walk", "walk_relay_2d"))
-        todo.append(("bingo-walk", "update_walk"))
-        todo.append(("bingo-walk", "serve_round"))
+        todo.append(("bingo-walk", "walk_step", None))
+        todo.append(("bingo-walk", "walk_whole", None))
+        todo.append(("bingo-walk", "walk_relay", None))
+        todo.append(("bingo-walk", "walk_relay_2d", None))
+        todo.append(("bingo-walk", "update_walk", None))
+        todo.append(("bingo-walk", "serve_round", None))
+        # capacity-ladder top tier (DESIGN.md §14): the same serving
+        # cells at C' = 2C, tagged so report.py's mem_deltas gates the
+        # GiB/dev cost of declaring the ladder before production does.
+        todo.append(("bingo-walk", "update_walk",
+                     {"capacity_mult": 2, "tag": "tier2x"}))
+        todo.append(("bingo-walk", "walk_relay",
+                     {"capacity_mult": 2, "tag": "tier2x"}))
     else:
-        todo = [(args.arch, args.shape)]
+        todo = [(args.arch, args.shape, None)]
 
     for mp in meshes:
-        for arch, shape in todo:
+        for arch, shape, ov in todo:
             try:
-                run_cell(arch, shape, multi_pod=mp)
+                run_cell(arch, shape, multi_pod=mp, overrides=ov)
             except Exception as e:  # noqa: BLE001 — report, keep going
                 failures.append((mp, arch, shape, repr(e)))
                 print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e}")

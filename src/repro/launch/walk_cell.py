@@ -95,8 +95,14 @@ def _state_specs(bcfg: BingoConfig, mesh) -> BingoState:
 
 def build_walk_cell(shape_name: str, mesh, overrides: dict) -> CellSpec:
     wcfg = bingo_walk.FULL
+    # Capacity-ladder tier sizing (DESIGN.md §14): capacity_mult=2**t
+    # compiles the SAME cell at rung t's C' — the dry-run proves a
+    # ladder's top tier still fits per device before it is declared in
+    # production (report.py's mem_deltas gates the tagged JSON).
+    cmult = int(overrides.get("capacity_mult", 1))
     bcfg = BingoConfig(num_vertices=wcfg.num_vertices,
-                       capacity=wcfg.capacity, bias_bits=wcfg.bias_bits,
+                       capacity=wcfg.capacity * cmult,
+                       bias_bits=wcfg.bias_bits,
                        adaptive=overrides.get("adaptive", True),
                        backend=overrides.get("backend", "auto"),
                        # production default K=2: hides the row-gather DMA

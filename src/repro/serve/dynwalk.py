@@ -50,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dyngraph import BingoConfig, BingoState
+from repro.core.dyngraph import BingoConfig, BingoState, regrow_state
 from repro.core.updates import NUM_REASONS, R_OK, UpdateStats, make_updater
 from repro.core.walks import WalkParams, make_walker
 from repro.graph.streams import UpdateStream, rounds_on_device
@@ -80,18 +80,32 @@ class DynamicWalkEngine:
         self.cfg = cfg
         self.params = params
         self._state = state
+        self._backend = backend
+        self._whole_walk = whole_walk
+        self._mesh = mesh
+        self._mailbox_cap = mailbox_cap
+        self._relay_overlap = relay_overlap
+        self._waxes = (walker_axes,) if isinstance(walker_axes, str) \
+            else tuple(walker_axes)
         self.num_shards = 1
-        if mesh is None:
-            self._update = make_updater(cfg, backend=backend,
-                                        with_active=True)
-            self._walk = make_walker(state, cfg, params, backend=backend,
-                                     whole_walk=whole_walk)
-        else:
+        self._vaxes = ()
+        self._num_vshards = 1
+        # Capacity-ladder bookkeeping (DESIGN.md §14): serving closures
+        # are cached per ladder tier, so an engine compiles at most
+        # len(cfg.ladder) update/walk program sets over its lifetime
+        # and re-entering a tier re-uses its programs.
+        self.regrow_counts = [0] * len(cfg.ladder)
+        self._tier_progs: dict = {}
+        self._regrow_progs: dict = {}
+        if mesh is not None:
             for a in mesh.axis_names:
                 self.num_shards *= mesh.shape[a]
-            self._state, self._update, self._walk = self._build_sharded(
-                state, cfg, params, backend, mesh, mailbox_cap,
-                walker_axes, relay_overlap)
+            self._vaxes = tuple(a for a in mesh.axis_names
+                                if a not in self._waxes)
+            for a in self._vaxes:
+                self._num_vshards *= mesh.shape[a]
+            self._state = self._shard_state(state, mesh, self._vaxes)
+        self._update, self._walk = self._tier_programs(cfg.tier)
         # Fixed-lane walk cohorts (DESIGN.md §12): every walk batch is
         # padded up to the smallest bucket >= its request count, so a
         # request-size-jittered stream only ever compiles |buckets|
@@ -125,8 +139,46 @@ class DynamicWalkEngine:
         self.walks_served = 0
 
     @staticmethod
-    def _build_sharded(state, cfg, params, backend, mesh, mailbox_cap,
-                       walker_axes=(), overlap=True):
+    def _shard_state(state, mesh, vaxes):
+        """Vertex-partition a state over the mesh's vertex axes
+        (replicated across walker axes)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sspec = jax.tree.map(
+            lambda leaf: P(vaxes, *([None] * (leaf.ndim - 1))), state)
+        return jax.device_put(
+            state, jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                                is_leaf=lambda s: isinstance(s, P)))
+
+    def _sspec(self):
+        """Partition specs of the live state (shape-independent: the
+        same specs describe every ladder tier, since regrowth only
+        widens trailing dims)."""
+        from jax.sharding import PartitionSpec as P
+        vaxes = self._vaxes
+        return jax.tree.map(
+            lambda leaf: P(vaxes, *([None] * (leaf.ndim - 1))),
+            self._state)
+
+    def _tier_programs(self, t: int):
+        """Compiled ``(update, walk)`` closures for ladder tier ``t`` —
+        built once per tier and cached (the §14 program-count bound:
+        at most ``len(cfg.ladder)`` update programs and
+        ``len(cfg.ladder) * |walk_buckets|`` walk programs ever
+        compile).  ``self._state`` must already be at tier ``t``."""
+        if t not in self._tier_progs:
+            tcfg = self.cfg.tier_config(t)
+            if self._mesh is None:
+                update = make_updater(tcfg, backend=self._backend,
+                                      with_active=True)
+                walk = make_walker(self._state, tcfg, self.params,
+                                   backend=self._backend,
+                                   whole_walk=self._whole_walk)
+            else:
+                update, walk = self._sharded_programs(tcfg)
+            self._tier_progs[t] = (update, walk)
+        return self._tier_progs[t]
+
+    def _sharded_programs(self, cfg):
         """Vertex-partitioned serving closures (DESIGN.md §10/§13).
 
         The state's vertex dim shards over the mesh's *vertex* axes
@@ -141,27 +193,21 @@ class DynamicWalkEngine:
         single-device whole walk for the same key.
         """
         from jax.experimental.shard_map import shard_map
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.core.backend import get_backend
         from repro.distributed.relay import make_relay, shard_index
         from repro.kernels.ops import seed_from_key
 
-        axes = tuple(mesh.axis_names)
-        waxes = (walker_axes,) if isinstance(walker_axes, str) \
-            else tuple(walker_axes)
-        vaxes = tuple(a for a in axes if a not in waxes)
-        num_vshards = 1
-        for a in vaxes:
-            num_vshards *= mesh.shape[a]
-        bk = get_backend(cfg.backend if backend is None else backend)
-        relay = make_relay(bk, cfg, params, mesh,
-                           mailbox_cap=mailbox_cap, overlap=overlap,
+        mesh, waxes, vaxes = self._mesh, self._waxes, self._vaxes
+        bk = get_backend(cfg.backend if self._backend is None
+                         else self._backend)
+        relay = make_relay(bk, cfg, self.params, mesh,
+                           mailbox_cap=self._mailbox_cap,
+                           overlap=self._relay_overlap,
                            walker_axes=waxes)         # validates V % S_v
-        shard_size = cfg.num_vertices // num_vshards
+        shard_size = cfg.num_vertices // self._num_vshards
         lcfg = dataclasses.replace(cfg, num_vertices=shard_size)
-
-        sspec = jax.tree.map(
-            lambda leaf: P(vaxes, *([None] * (leaf.ndim - 1))), state)
+        sspec = self._sspec()
 
         def update_local(st, is_insert, uu, vv, ww, active):
             lo = shard_index(mesh, vaxes) * shard_size
@@ -183,10 +229,35 @@ class DynamicWalkEngine:
             paths, _rounds, _ovf = relay(st, starts, seed_from_key(key))
             return st, paths
 
-        sharded = jax.device_put(
-            state, jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
-                                is_leaf=lambda s: isinstance(s, P)))
-        return sharded, update, walk
+        return update, walk
+
+    def _regrow_program(self, t: int):
+        """Jitted donated-state migration tier ``t`` -> ``t + 1``.
+
+        Single device: one jit of ``regrow_state``.  Sharded: a
+        shard_map of the same pure-jnp migration over shard-local
+        configs — every shard (and walker replica) re-lays its
+        partition in the same program, so the mesh switches tiers in
+        lockstep or not at all.
+        """
+        if t not in self._regrow_progs:
+            tcfg = self.cfg.tier_config(t)
+            ncfg = self.cfg.tier_config(t + 1)
+            if self._mesh is None:
+                self._regrow_progs[t] = jax.jit(
+                    lambda st: regrow_state(st, tcfg, ncfg),
+                    donate_argnums=0)
+            else:
+                from jax.experimental.shard_map import shard_map
+                shard_size = tcfg.num_vertices // self._num_vshards
+                lcfg = dataclasses.replace(tcfg, num_vertices=shard_size)
+                lncfg = dataclasses.replace(ncfg, num_vertices=shard_size)
+                sspec = self._sspec()
+                fn = shard_map(lambda st: regrow_state(st, lcfg, lncfg),
+                               mesh=self._mesh, in_specs=(sspec,),
+                               out_specs=sspec, check_rep=False)
+                self._regrow_progs[t] = jax.jit(fn, donate_argnums=0)
+        return self._regrow_progs[t]
 
     # -- state ownership -----------------------------------------------------
     @property
@@ -231,7 +302,7 @@ class DynamicWalkEngine:
                 self._state, is_insert, u, v, w, lanes)
             self.rounds_ingested += 1
             self.updates_applied += nv
-            return stats
+            return stats._replace(max_fill=self._fill())
 
         g = self.guard
         rnd = self.rounds_ingested
@@ -251,7 +322,7 @@ class DynamicWalkEngine:
                 (rnd, is_insert, u, v, w, reasons, stats.del_applied, nv))
             self.rounds_ingested += 1
             self.updates_applied += nv
-            return stats
+            return stats._replace(max_fill=self._fill())
         counts = g.account(rnd, np.asarray(is_insert)[:nv],
                            np.asarray(u)[:nv], np.asarray(v)[:nv],
                            np.asarray(w)[:nv], np.asarray(reasons)[:nv])
@@ -265,15 +336,27 @@ class DynamicWalkEngine:
                 transitions=stats.transitions + rstats.transitions)
         self.rounds_ingested += 1
         self.updates_applied += nv
-        return stats
+        return stats._replace(max_fill=self._fill())
+
+    def _fill(self):
+        """Device-scalar fill watermark ``max(deg) / capacity`` — never
+        a host sync; on the sharded state the max over the partitioned
+        ``deg`` is a GSPMD all-reduce, so every shard computes the same
+        value (the §14 lockstep-trigger input)."""
+        return jnp.max(self._state.deg) / self.cfg.capacity
 
     def _run_guard_retry(self, rnd) -> Optional[UpdateStats]:
-        """One bounded pending-overflow retry batch, if deletes since
-        the last retry may have freed capacity.  Returns the retry
-        round's stats when lanes applied, else None."""
+        """One bounded pending-overflow retry batch, if deletes (or a
+        regrow) since the last retry may have made capacity.  Returns
+        the retry round's stats when lanes applied, else None."""
         g = self.guard
         if not g.want_retry():
             return None
+        return self._retry_batch(rnd)
+
+    def _retry_batch(self, rnd) -> Optional[UpdateStats]:
+        """One unconditional fixed-shape retry round of pending inserts."""
+        g = self.guard
         entries, ru, rv, rw = g.take_retry()
         r_ins = jnp.ones((g.policy.retry_batch,), bool)
         ru, rv, rw = jnp.asarray(ru), jnp.asarray(rv), jnp.asarray(rw)
@@ -311,17 +394,109 @@ class DynamicWalkEngine:
         self._run_guard_retry(self.rounds_ingested)
         return len(backlog)
 
-    def audit(self) -> dict:
+    def audit(self, *, pressure: bool = False) -> dict:
         """Device-side invariant sweep of the live state (DESIGN.md §11).
 
         Returns ``{rule: violating-vertex count}`` over the cheap
         jit-able subset (``core/invariants.check_state_device``) —
         all-zero for a healthy state.  Works on the sharded state too
         (plain jnp; GSPMD partitions the row scans).
+
+        ``pressure=True`` additionally feeds the guard's pending-insert
+        depth to the ``at_capacity`` rule (rows full at ``deg == C``
+        while inserts wait — loss-imminent without a regrow, DESIGN.md
+        §14) and appends the capacity-pressure gauges from
+        ``pressure()`` under non-rule keys.
         """
         from repro.core.invariants import DEVICE_RULES, check_state_device
-        counts = np.asarray(check_state_device(self._state, self.cfg))
-        return dict(zip(DEVICE_RULES, counts.tolist()))
+        pend = len(self.guard.pending) \
+            if (pressure and self.guard is not None) else 0
+        counts = np.asarray(check_state_device(self._state, self.cfg,
+                                               pend))
+        out = dict(zip(DEVICE_RULES, counts.tolist()))
+        if pressure:
+            out.update(self.pressure())
+        return out
+
+    # -- capacity regrowth (DESIGN.md §14) -----------------------------------
+    @property
+    def tier(self) -> int:
+        """Current rung of the capacity ladder."""
+        return self.cfg.tier
+
+    def max_fill(self) -> float:
+        """Host-synced fill watermark ``max(deg) / capacity``."""
+        return float(jax.device_get(self._fill()))
+
+    def pressure(self) -> dict:
+        """Capacity-pressure gauges: fill watermark, ladder position,
+        per-tier regrow counts, pending-insert queue depth."""
+        return {
+            "max_fill": self.max_fill(),
+            "tier": self.tier,
+            "capacity": self.cfg.capacity,
+            "pending_depth": len(self.guard.pending)
+            if self.guard is not None else 0,
+            "regrow_counts": list(self.regrow_counts),
+        }
+
+    def want_regrow(self, watermark: float = 0.95) -> bool:
+        """Should the engine escalate to the next ladder tier?
+
+        True when a next tier exists and either the fill watermark
+        crossed ``watermark`` or capacity overflows are already queued
+        (pending inserts — loss-imminent).  One host sync; schedulers
+        call this at drain points only.  The watermark max runs over
+        the sharded ``deg`` as a GSPMD all-reduce, so in mesh mode the
+        decision is identical on every shard and walker replica — the
+        whole mesh switches tiers in lockstep or not at all.
+        """
+        if self.tier + 1 >= len(self.cfg.ladder):
+            return False
+        if self.guard is not None and self.guard.pending:
+            return True
+        return self.max_fill() >= watermark
+
+    def regrow(self) -> BingoConfig:
+        """Escalate the live state to the next capacity tier.
+
+        Order matters for crash-exactness and replay bit-identity
+        (DESIGN.md §14): (1) settle any deferred guard accounting at
+        the old tier (the backlog's reason vectors were classified
+        against it); (2) run the donated-state migration — pinned
+        rebuild-equivalent to ``from_edges`` at the new capacity, so
+        every future walk is bit-identical to an engine built there;
+        (3) re-target the guard's classifier and restore pending retry
+        budgets; (4) drain the pending queue against the grown state
+        until it empties or stops making progress (entries still over
+        the new capacity wait for the next tier or deletes — never
+        quarantined by budget exhaustion at a stale tier).
+
+        Raises ``ValueError`` at the top of the ladder — callers gate
+        on ``want_regrow()``.
+        """
+        t = self.tier
+        if t + 1 >= len(self.cfg.ladder):
+            raise ValueError(
+                f"already at the top tier of capacity ladder "
+                f"{self.cfg.ladder}")
+        if self.defer_guard:
+            self.drain_guard()
+        mig = self._regrow_program(t)
+        self._state = mig(self._state)
+        self.cfg = self.cfg.tier_config(t + 1)
+        self.regrow_counts[t + 1] += 1
+        self._update, self._walk = self._tier_programs(t + 1)
+        g = self.guard
+        if g is not None:
+            g.regrow(self.cfg)
+            while g.pending:
+                before = len(g.pending)
+                self._retry_batch(self.rounds_ingested)
+                if len(g.pending) >= before:
+                    break   # survivors exceed even C' — wait for the
+                            # next tier (or deletes); never quarantine
+        return self.cfg
 
     def _bucket_for(self, n: int) -> int:
         for b in self.walk_buckets:
@@ -371,11 +546,23 @@ class DynamicWalkEngine:
         return paths
 
     def walk_cache_size(self) -> int:
-        """Compiled-program count of the walk closure (the §12
-        zero-recompilation pin reads this; -1 if the runtime does not
-        expose it)."""
+        """Compiled-program count across every tier's walk closure (the
+        §12 zero-recompilation pin and the §14 ladder bound
+        ``<= len(cfg.ladder) * |walk_buckets|`` read this; -1 if the
+        runtime does not expose it)."""
         try:
-            return int(self._walk._cache_size())
+            return sum(int(walk._cache_size())
+                       for _, walk in self._tier_progs.values())
+        except Exception:
+            return -1
+
+    def update_cache_size(self) -> int:
+        """Compiled-program count across every tier's update closure
+        (the §14 ladder bound: ``<= len(cfg.ladder)`` programs for a
+        fixed round shape; -1 if the runtime does not expose it)."""
+        try:
+            return sum(int(upd._cache_size())
+                       for upd, _ in self._tier_progs.values())
         except Exception:
             return -1
 

@@ -206,6 +206,7 @@ class IngestGuard:
         self.retried = 0
         self.reason_counts = np.zeros(NUM_REASONS, np.int64)
         self.deletes_since_retry = 0
+        self.regrows_since_retry = 0
 
     # -- conservation ------------------------------------------------------
     def check_conservation(self):
@@ -223,6 +224,7 @@ class IngestGuard:
             "ingested": self.ingested, "accepted": self.accepted,
             "quarantined": self.quarantined, "retried": self.retried,
             "deletes_since_retry": self.deletes_since_retry,
+            "regrows_since_retry": self.regrows_since_retry,
             "reason_counts": self.reason_counts.tolist(),
             "quarantine": [list(q) for q in self.quarantine],
             "pending": [list(p) for p in self.pending],
@@ -234,6 +236,7 @@ class IngestGuard:
         self.quarantined = int(snap["quarantined"])
         self.retried = int(snap["retried"])
         self.deletes_since_retry = int(snap["deletes_since_retry"])
+        self.regrows_since_retry = int(snap.get("regrows_since_retry", 0))
         self.reason_counts = np.asarray(snap["reason_counts"], np.int64)
         self.quarantine = [
             QuarantineRecord(int(r), bool(i), int(u), int(v), float(w),
@@ -272,9 +275,30 @@ class IngestGuard:
                 self.quarantined += 1
         return counts
 
+    # -- capacity regrowth -------------------------------------------------
+    def regrow(self, cfg_next: BingoConfig):
+        """Re-target the guard at a grown capacity tier (DESIGN.md §14).
+
+        The classifier's capacity check is against ``cfg.capacity``, so
+        it must be rebuilt at the new tier; every pending insert gets
+        its retry budget restored — exhausting the budget at the *old*
+        tier says nothing about fitting at the new one.
+        """
+        self.cfg = cfg_next
+        self.classify = make_classifier(cfg_next, self.policy)
+        self.regrows_since_retry += 1
+        self.pending = deque(
+            p._replace(retries_left=self.policy.max_retries)
+            for p in self.pending)
+
     # -- overflow retries --------------------------------------------------
     def want_retry(self) -> bool:
-        return bool(self.pending) and self.deletes_since_retry > 0
+        # Retry once capacity may have been freed (deletes) *or* created
+        # (a ladder regrow).  Requiring deletes alone starves insert-only
+        # streams: a spilled insert would sit pending forever even after
+        # the vertex's tier grew past its degree.
+        return bool(self.pending) and (self.deletes_since_retry > 0
+                                       or self.regrows_since_retry > 0)
 
     def take_retry(self):
         """Pop up to ``retry_batch`` pending inserts; pad to fixed shape.
@@ -293,6 +317,7 @@ class IngestGuard:
         for i, p in enumerate(entries):
             u[i], v[i], w[i] = p.u, p.v, p.w
         self.deletes_since_retry = 0
+        self.regrows_since_retry = 0
         return entries, u, v, w
 
     def settle_retry(self, rnd, entries, reasons_np) -> int:

@@ -95,6 +95,15 @@ class WriteAheadLog:
                             splits=np.asarray(splits, np.int64),
                             served=np.asarray(served, np.int64))
 
+    def append_regrow(self, tier: int) -> int:
+        """One capacity-ladder escalation (DESIGN.md §14).  Logged
+        append-before-apply like rounds: a crash between the append and
+        the migration replays the regrow exactly once, a crash before
+        the append leaves no record and the pressure trigger simply
+        re-fires — the restored state is never half-migrated."""
+        return self._append(kind=np.asarray("regrow"),
+                            tier=np.asarray(tier, np.int64))
+
     def replay(self, from_seq: int = 0) -> Iterator[Tuple[int, str, dict]]:
         """Yield ``(seq, kind, payload)`` for records with seq >= from_seq."""
         for seq in self._seqs():
@@ -148,6 +157,12 @@ class RecoverableEngine:
             self.wal.append_walks(1, int(starts.shape[0]))
         return self.engine.walk(starts, key=key)
 
+    def regrow(self) -> BingoConfig:
+        """Escalate the capacity ladder, WAL-logged append-before-apply
+        (see ``WriteAheadLog.append_regrow`` for the crash contract)."""
+        self.wal.append_regrow(self.engine.tier + 1)
+        return self.engine.regrow()
+
     # -- snapshot / restore ------------------------------------------------
     def checkpoint(self) -> int:
         """Write a generation-stamped snapshot; returns its generation.
@@ -165,6 +180,8 @@ class RecoverableEngine:
             "key_data": np.asarray(
                 jax.random.key_data(e._key)).tolist(),
             "guard": e.guard.snapshot() if e.guard is not None else None,
+            "tier": e.cfg.tier,
+            "regrow_counts": list(e.regrow_counts),
         }
         self.ckpt.save(gen, e.state, extra)
         self._rounds_since_snapshot = 0
@@ -187,17 +204,28 @@ class RecoverableEngine:
         gen = latest_step(ckpt_dir)
         if gen is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-        state = restore_checkpoint(ckpt_dir, gen, like=empty_state(cfg))
+        # The manifest decides the snapshot's ladder tier BEFORE the
+        # state is read — its buffer shapes are the tier's, not the base
+        # config's (a snapshot taken after a regrow is at C', and a
+        # crash mid-regrow restores the pre-regrow tier + a WAL regrow
+        # record, never a half-migrated state).
         with open(os.path.join(ckpt_dir, f"step_{gen}",
                                "manifest.json")) as f:
             extra = json.load(f)["extra"]
+        tier = int(extra.get("tier", cfg.tier))
+        cfg_run = cfg.tier_config(tier)
+        state = restore_checkpoint(ckpt_dir, gen,
+                                   like=empty_state(cfg_run))
 
-        engine = DynamicWalkEngine(state, cfg, params, **engine_kwargs)
+        engine = DynamicWalkEngine(state, cfg_run, params, **engine_kwargs)
         engine._key = jax.random.wrap_key_data(
             jnp.asarray(extra["key_data"], jnp.uint32))
         engine.rounds_ingested = int(extra["rounds_ingested"])
         engine.updates_applied = int(extra["updates_applied"])
         engine.walks_served = int(extra["walks_served"])
+        if "regrow_counts" in extra:
+            engine.regrow_counts = [int(c)
+                                    for c in extra["regrow_counts"]]
         if engine.guard is not None and extra["guard"] is not None:
             engine.guard.load_snapshot(extra["guard"])
 
@@ -211,4 +239,6 @@ class RecoverableEngine:
                 for _ in range(int(p["splits"])):
                     engine._key, _ = jax.random.split(engine._key)
                 engine.walks_served += int(p["served"])
+            elif kind == "regrow":
+                engine.regrow()       # exactly-once: logged pre-apply
         return rec

@@ -57,7 +57,8 @@ import numpy as np
 from repro.serve.dynwalk import DynamicWalkEngine
 
 __all__ = ["SchedulerConfig", "WalkResult", "UpdateOp", "WalkOp",
-           "DrainOp", "ServingScheduler", "replay_admission_trace"]
+           "DrainOp", "RegrowOp", "ServingScheduler",
+           "replay_admission_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +73,10 @@ class SchedulerConfig:
     are rejected with backpressure; ``max_inflight`` caps dispatched-
     but-unharvested walk cohorts so device queues stay bounded;
     ``guard_drain_rounds`` is how many guarded rounds may backlog
-    before the scheduler takes the one-sync accounting drain.
+    before the scheduler takes the one-sync accounting drain;
+    ``regrow_watermark`` is the fill fraction (``max(deg)/capacity``)
+    past which a drain point escalates the engine's capacity ladder
+    (DESIGN.md §14) — pending capacity spills escalate regardless.
     """
     update_lanes: int = 64
     max_update_delay: int = 4
@@ -80,6 +84,7 @@ class SchedulerConfig:
     max_update_queue: int = 1024
     max_inflight: int = 8
     guard_drain_rounds: int = 8
+    regrow_watermark: float = 0.95
 
 
 @dataclasses.dataclass
@@ -115,6 +120,14 @@ class DrainOp(NamedTuple):
     """A guard-accounting drain point — replay must retry capacity
     spills at the same moments the live schedule did."""
     rounds: int
+
+
+class RegrowOp(NamedTuple):
+    """A capacity-ladder escalation (DESIGN.md §14), recorded at the
+    drain point where the live schedule took it — replay regrows at the
+    same trace position and never re-derives the trigger, so live and
+    replay migrate the same state at the same moment."""
+    tier: int        # ladder rung AFTER the escalation
 
 
 class _QueuedWalk(NamedTuple):
@@ -256,6 +269,12 @@ class ServingScheduler:
         if (self.engine.defer_guard
                 and self.engine.guard_backlog >= self.cfg.guard_drain_rounds):
             self._drain_guard()
+            self._maybe_regrow()
+        elif (len(self.engine.cfg.ladder) > 1
+                and self.tick_count % self.cfg.guard_drain_rounds == 0):
+            # unguarded engines never hit the drain branch; give their
+            # ladder the same bounded-sync escalation cadence
+            self._maybe_regrow()
 
     def poll(self) -> List[WalkResult]:
         """Harvest without blocking; returns (and clears) ready results."""
@@ -272,6 +291,7 @@ class ServingScheduler:
             self._dispatch_walks()
             self._harvest(block=True)
         self._drain_guard()
+        self._maybe_regrow()
         out, self._completed = self._completed, []
         return out
 
@@ -399,6 +419,21 @@ class ServingScheduler:
         settled = self.engine.drain_guard()
         self.trace.append(DrainOp(settled))
 
+    def _maybe_regrow(self) -> None:
+        """Escalate the capacity ladder when pressure demands it — only
+        ever called at drain points, so the ``want_regrow`` host sync
+        is bounded by the drain cadence.  Loops: a burst that overshoots
+        one tier climbs as many rungs as the pressure justifies.  Each
+        escalation lands in the trace AFTER the drain's ``DrainOp``, so
+        replay drains then regrows at exactly the same position."""
+        eng = self.engine
+        if len(eng.cfg.ladder) <= 1:
+            return
+        while eng.want_regrow(self.cfg.regrow_watermark):
+            eng.regrow()
+            self.trace.append(RegrowOp(eng.tier))
+            self.generation += 1     # the state buffer was re-laid
+
 
 def replay_admission_trace(engine: DynamicWalkEngine, trace) -> List[np.ndarray]:
     """Serially replay an admission trace on a FRESH engine.
@@ -429,6 +464,8 @@ def replay_admission_trace(engine: DynamicWalkEngine, trace) -> List[np.ndarray]
             out.append(np.asarray(engine.walk(jnp.asarray(op.starts))))
         elif isinstance(op, DrainOp):
             engine.drain_guard()
+        elif isinstance(op, RegrowOp):
+            engine.regrow()          # never re-derive the trigger
         else:
             raise TypeError(f"unknown trace op {op!r}")
     engine.drain_guard()

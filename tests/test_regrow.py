@@ -1,0 +1,508 @@
+"""Capacity-ladder regrowth (DESIGN.md §14).
+
+The pins, per ISSUE 10's acceptance criteria:
+
+* **Rebuild equivalence** — ``regrow_state`` output is bit-identical to
+  ``from_edges`` at the larger capacity (adaptive, baseline and fp-bias
+  modes, chunked and unchunked tiling), so every future walk is
+  bit-identical by the counter PRNG's shape-independence.
+* **No starvation, no growth loss** — an insert-only stream never burns
+  retry budget, a regrow re-attempts every pending capacity spill, and
+  a hub driven through >= 2 ladder tiers loses ZERO growth edges where
+  the fixed-capacity engine quarantines them.
+* **Replay** — a ``RegrowOp`` recorded at a drain point replays
+  bit-identically, guard on and off, at 1 and (with 8 fake devices) 8
+  shards, where the trigger is a GSPMD all-reduce so every shard
+  switches tiers in lockstep.
+* **Crash exactness** — a WAL regrow record without its apply (crash
+  mid-regrow) restores bit-exact via exactly-once replay; a crash
+  before the append restores the old tier with pending intact.
+* **Program bounds** — the ladder compiles at most ``len(ladder)``
+  update programs and ``len(ladder) * |buckets|`` walk programs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walks
+from repro.core.backend import get_backend
+from repro.core.dyngraph import BingoConfig, from_edges, regrow_state
+from repro.core.invariants import check_state
+from repro.core.updates import R_CAPACITY
+from repro.core.walks import WalkParams
+from repro.serve.dynwalk import DynamicWalkEngine
+from repro.serve.guard import GuardPolicy
+from repro.serve.recovery import RecoverableEngine
+from repro.serve.scheduler import (RegrowOp, SchedulerConfig,
+                                   ServingScheduler, WalkOp,
+                                   replay_admission_trace)
+from tests.conftest import empirical_dist, random_graph, tv_distance
+
+DEVS = len(jax.devices())
+multi = pytest.mark.skipif(
+    DEVS < 8, reason="needs 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+PARAMS = WalkParams(kind="deepwalk", length=5)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- the ladder on BingoConfig ---------------------------------------------
+
+def test_ladder_validation_and_tiers():
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=3,
+                      capacity_ladder=(4, 8, 16))
+    assert cfg.ladder == (4, 8, 16) and cfg.tier == 0
+    c2 = cfg.tier_config(2)
+    assert c2.capacity == 16 and c2.tier == 2
+    assert c2.ladder == cfg.ladder          # one shared ladder
+    # no declared ladder -> a single implicit rung
+    flat = BingoConfig(num_vertices=8, capacity=4, bias_bits=3)
+    assert flat.ladder == (4,) and flat.tier == 0
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BingoConfig(num_vertices=8, capacity=4, bias_bits=3,
+                    capacity_ladder=(4, 4, 8))
+    with pytest.raises(ValueError, match="not a rung"):
+        BingoConfig(num_vertices=8, capacity=5, bias_bits=3,
+                    capacity_ladder=(4, 8))
+
+
+# -- rebuild equivalence ---------------------------------------------------
+
+@pytest.mark.parametrize("adaptive,fp", [(True, False), (False, False),
+                                         (True, True)],
+                         ids=["adaptive", "baseline", "fp-bias"])
+def test_regrow_rebuild_equivalent(adaptive, fp):
+    """``regrow_state`` == ``from_edges`` at C', bit for bit — every
+    derived table is a pure function of the (padded) rows, and the
+    chunked tiling path lands the identical result."""
+    V, C = 32, 8
+    src, dst, w = random_graph(V, C, max_bias=31, seed=4)
+    bias = w.astype(np.float32) / 4 + 0.25 if fp else w
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=5,
+                      adaptive=adaptive, fp_bias=fp, lam=4.0,
+                      capacity_ladder=(8, 16))
+    cfg2 = cfg.tier_config(1)
+    st = from_edges(cfg, src, dst, bias)
+    ref = from_edges(cfg2, src, dst, bias)
+    grown = regrow_state(st, cfg, cfg2)
+    _assert_trees_equal(grown, ref)
+    check_state(grown, cfg2)
+    # chunked tiling (V=32 splits into 8-row tiles) is bit-identical
+    _assert_trees_equal(regrow_state(st, cfg, cfg2, chunk=8), ref)
+    with pytest.raises(ValueError, match="must grow"):
+        regrow_state(ref, cfg2, cfg)
+
+
+def test_regrown_engine_walks_bit_identical():
+    """After ``engine.regrow()`` every walk is bit-identical to an
+    engine BUILT at C' — the counter PRNG keys draws by (seed, wid, t),
+    never by buffer shapes."""
+    V, C = 32, 8
+    src, dst, w = random_graph(V, C, max_bias=15, seed=6)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=4,
+                      capacity_ladder=(8, 16))
+    cfg2 = cfg.tier_config(1)
+    eng = DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg, PARAMS,
+                            seed=3, guard=True)
+    ref = DynamicWalkEngine(from_edges(cfg2, src, dst, w), cfg2, PARAMS,
+                            seed=3)
+    assert eng.regrow().capacity == 16
+    assert eng.tier == 1 and eng.regrow_counts == [0, 1]
+    starts = jnp.arange(16, dtype=jnp.int32) % V
+    key = jax.random.key(42)
+    np.testing.assert_array_equal(np.asarray(eng.walk(starts, key=key)),
+                                  np.asarray(ref.walk(starts, key=key)))
+    assert all(v == 0 for v in eng.audit().values())
+    with pytest.raises(ValueError, match="top tier"):
+        eng.regrow()
+
+
+def test_transition_equivalence_across_regrow():
+    """Statistical half of the boundary pin: one-step transition
+    frequencies from a biased hub match the exact Σw marginal on BOTH
+    sides of the regrow (and each other)."""
+    V = 8
+    src = np.zeros(5, np.int32)
+    dst = np.arange(1, 6, dtype=np.int32)
+    w = np.array([5, 4, 3, 2, 1], np.int32)
+    cfg = BingoConfig(num_vertices=V, capacity=8, bias_bits=3,
+                      capacity_ladder=(8, 16))
+    cfg2 = cfg.tier_config(1)
+    st = from_edges(cfg, src, dst, w)
+    grown = regrow_state(st, cfg, cfg2)
+    p1 = WalkParams(kind="deepwalk", length=1)
+    starts = jnp.zeros(3000, jnp.int32)
+    pre = np.asarray(walks.random_walk(
+        st, cfg, starts, jax.random.key(1), p1))[:, 1]
+    post = np.asarray(walks.random_walk(
+        grown, cfg2, starts, jax.random.key(2), p1))[:, 1]
+    exact = np.zeros(V)
+    exact[dst] = w / w.sum()
+    assert tv_distance(empirical_dist(pre, V), exact) < 0.05
+    assert tv_distance(empirical_dist(post, V), exact) < 0.05
+    assert tv_distance(empirical_dist(pre, V),
+                       empirical_dist(post, V)) < 0.06
+
+
+# -- guard: starvation fix + regrow retries --------------------------------
+
+def test_insert_only_stream_retries_after_regrow():
+    """The satellite-1 pin: an insert-only stream never burns retry
+    budget (nothing freed capacity), and a regrow re-attempts every
+    pending spill against the grown state — zero quarantined."""
+    src = np.array([0, 0, 0, 0, 1], np.int32)
+    dst = np.array([1, 2, 3, 4, 0], np.int32)
+    w = np.ones(5, np.int32)
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=3,
+                      capacity_ladder=(4, 8))
+    eng = DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg, PARAMS,
+                            guard=True)
+    g = eng.guard
+    # vertex 0 is full: three more inserts all spill to pending
+    eng.ingest(jnp.ones(3, bool), jnp.zeros(3, jnp.int32),
+               jnp.array([5, 6, 7], jnp.int32), jnp.ones(3, jnp.int32))
+    assert len(g.pending) == 3 and g.quarantined == 0
+    assert not g.want_retry()        # insert-only: no retry to burn
+    # more insert-only traffic elsewhere: budgets stay untouched
+    eng.ingest(jnp.ones(1, bool), jnp.array([2], jnp.int32),
+               jnp.array([3], jnp.int32), jnp.ones(1, jnp.int32))
+    assert len(g.pending) == 3 and g.retried == 0
+    assert all(p.retries_left == g.policy.max_retries for p in g.pending)
+    # pressure is visible before the loss would happen
+    audit = eng.audit(pressure=True)
+    assert audit["at_capacity"] >= 1
+    assert audit["pending_depth"] == 3 and audit["max_fill"] == 1.0
+    # the regrow drains the queue — nothing quarantined, nothing lost
+    eng.regrow()
+    assert not g.pending and g.quarantined == 0 and g.retried == 3
+    g.check_conservation()
+    row = np.asarray(eng.state.nbr[0])
+    deg = int(eng.state.deg[0])
+    assert deg == 7 and {5, 6, 7} <= set(row[:deg].tolist())
+    assert eng.audit(pressure=True)["at_capacity"] == 0
+
+
+def _hub_soak_cfg():
+    """V=16 hub graph on a 3-rung ladder; returns (cfg, src, dst, w)."""
+    src = np.array([0, 0, 0, 1, 1, 1, 2], np.int32)
+    dst = np.array([1, 2, 3, 4, 5, 6, 7], np.int32)
+    w = np.ones(7, np.int32)
+    cfg = BingoConfig(num_vertices=16, capacity=4, bias_bits=3,
+                      capacity_ladder=(4, 8, 16))
+    return cfg, src, dst, w
+
+
+def _hub_traffic(rng):
+    """6 four-lane rounds: 2 hub inserts + 1 filler insert + 1 delete
+    of one of vertex 1's seeded edges (absent after round 3 — dirt)."""
+    for r in range(6):
+        t1, t2 = 4 + 2 * r, 5 + 2 * r
+        yield (np.array([True, True, True, False]),
+               np.array([0, 0, 3 + r, 1], np.int32),
+               np.array([t1, t2, 9, 4 + (r % 3)], np.int32),
+               np.ones(4, np.int32),
+               rng.integers(0, 16, int(rng.integers(2, 8))).astype(
+                   np.int32))
+
+
+def test_growth_soak_zero_loss_vs_fixed_capacity():
+    """The tentpole acceptance soak: a hub driven through two ladder
+    tiers under interleaved walks + deletes loses ZERO growth edges,
+    where the fixed-capacity engine quarantines them; the recorded
+    RegrowOps replay bit-identically on a fresh engine."""
+    cfg, src, dst, w = _hub_soak_cfg()
+    policy = GuardPolicy(max_retries=2)
+
+    def mk(c):
+        return DynamicWalkEngine(from_edges(c, src, dst, w), c, PARAMS,
+                                 seed=7, guard=policy, walk_buckets=(8,))
+
+    eng = mk(cfg)
+    sched = ServingScheduler(eng, SchedulerConfig(
+        update_lanes=4, max_update_delay=1, guard_drain_rounds=2))
+    for ins, u, v, ww, starts in _hub_traffic(np.random.default_rng(0)):
+        assert sched.submit_update(ins, u, v, ww)
+        assert sched.submit_walk(starts) is not None
+        sched.tick()
+    done = {r.rid: r for r in sched.close()}
+    sched.check_conservation()
+    g = eng.guard
+    g.check_conservation()
+
+    # climbed both rungs, in the trace, with zero growth-edge loss
+    assert eng.tier == 2 and eng.cfg.capacity == 16
+    assert eng.regrow_counts == [0, 1, 1]
+    assert sum(isinstance(op, RegrowOp) for op in sched.trace) == 2
+    assert not g.pending
+    assert all(q.reason != R_CAPACITY for q in g.quarantine)
+    deg = int(eng.state.deg[0])
+    row = set(np.asarray(eng.state.nbr[0])[:deg].tolist())
+    assert deg == 15 and set(range(1, 16)) <= row
+
+    # the admission trace (incl. RegrowOps) replays bit-identically
+    fresh = mk(cfg)
+    replayed = iter(replay_admission_trace(fresh, sched.trace))
+    n_walks = 0
+    for op in sched.trace:
+        if isinstance(op, WalkOp):
+            rep = next(replayed)
+            off = np.cumsum([0] + list(op.sizes))
+            for j, rid in enumerate(op.rids):
+                np.testing.assert_array_equal(
+                    done[rid].paths, rep[off[j]:off[j + 1]])
+            n_walks += 1
+    assert n_walks == 6
+    assert fresh.tier == 2 and fresh.guard.snapshot() == g.snapshot()
+    _assert_trees_equal(fresh.state, eng.state)
+
+    # contrast: the pre-PR regime (no ladder) loses exactly these edges
+    fixed = mk(dataclasses_replace_no_ladder(cfg))
+    for ins, u, v, ww, _ in _hub_traffic(np.random.default_rng(0)):
+        fixed.ingest(jnp.asarray(ins), jnp.asarray(u), jnp.asarray(v),
+                     jnp.asarray(ww))
+    g2 = fixed.guard
+    g2.check_conservation()
+    lost = sum(q.reason == R_CAPACITY for q in g2.quarantine) \
+        + len(g2.pending)
+    assert lost > 0 and int(fixed.state.deg[0]) == 4
+
+
+def dataclasses_replace_no_ladder(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, capacity_ladder=())
+
+
+# -- crash exactness -------------------------------------------------------
+
+def _spill_rounds():
+    """Two rounds that leave vertex 0 over capacity with live pending."""
+    return [(np.ones(3, bool), np.zeros(3, np.int32),
+             np.array([5, 6, 7], np.int32), np.ones(3, np.int32)),
+            (np.ones(2, bool), np.array([2, 0], np.int32),
+             np.array([6, 8], np.int32), np.ones(2, np.int32))]
+
+
+def test_crash_mid_regrow_restores_bit_exact(tmp_path):
+    """WAL append-before-apply around the migration: a crash BETWEEN
+    the regrow record and its apply restores bit-identical to the
+    uninterrupted twin (exactly-once replay); a crash BEFORE the append
+    restores the old tier with pending intact — never half-migrated."""
+    src = np.array([0, 0, 0, 0, 1], np.int32)
+    dst = np.array([1, 2, 3, 4, 0], np.int32)
+    w = np.ones(5, np.int32)
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=3,
+                      capacity_ladder=(4, 8))
+    starts = jnp.arange(8, dtype=jnp.int32)
+
+    def build(d):
+        eng = DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg,
+                                PARAMS, guard=True, seed=0)
+        rec = RecoverableEngine(eng, ckpt_dir=str(d))
+        for r in _spill_rounds():
+            rec.ingest(*(jnp.asarray(x) for x in r))
+        return rec
+
+    ref = build(tmp_path / "ref")
+    ref.regrow()                                   # uninterrupted twin
+
+    crashed = build(tmp_path / "mid")
+    crashed.wal.append_regrow(crashed.engine.tier + 1)
+    crashed.wait()
+    del crashed                                    # crash: logged, unapplied
+    rec2 = RecoverableEngine.restore(str(tmp_path / "mid"), cfg, PARAMS,
+                                     guard=True)
+    assert rec2.engine.cfg.capacity == 8 and rec2.engine.tier == 1
+    assert rec2.engine.regrow_counts == [0, 1]
+    _assert_trees_equal(ref.engine.state, rec2.engine.state)
+    assert ref.engine.guard.snapshot() == rec2.engine.guard.snapshot()
+    np.testing.assert_array_equal(np.asarray(ref.walk(starts)),
+                                  np.asarray(rec2.walk(starts)))
+
+    early = build(tmp_path / "pre")
+    early.wait()
+    del early                                      # crash BEFORE the append
+    rec3 = RecoverableEngine.restore(str(tmp_path / "pre"), cfg, PARAMS,
+                                     guard=True)
+    assert rec3.engine.cfg.capacity == 4 and rec3.engine.tier == 0
+    assert len(rec3.engine.guard.pending) > 0      # spills wait, not lost
+    rec3.engine.guard.check_conservation()
+
+
+def test_checkpoint_after_regrow_restores_at_tier(tmp_path):
+    """A snapshot taken AFTER a regrow has C'-shaped buffers: restore
+    must read the manifest's tier before the state (the order flip)."""
+    src = np.array([0, 0, 0, 0], np.int32)
+    dst = np.array([1, 2, 3, 4], np.int32)
+    w = np.ones(4, np.int32)
+    cfg = BingoConfig(num_vertices=8, capacity=4, bias_bits=3,
+                      capacity_ladder=(4, 8))
+    eng = DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg, PARAMS,
+                            guard=True, seed=1)
+    rec = RecoverableEngine(eng, ckpt_dir=str(tmp_path))
+    for r in _spill_rounds():
+        rec.ingest(*(jnp.asarray(x) for x in r))
+    rec.regrow()
+    rec.checkpoint()
+    rec.wait()
+    del rec
+    rec2 = RecoverableEngine.restore(str(tmp_path), cfg, PARAMS,
+                                     guard=True)
+    assert rec2.engine.cfg.capacity == 8
+    _assert_trees_equal(eng.state, rec2.engine.state)
+    assert eng.guard.snapshot() == rec2.engine.guard.snapshot()
+
+
+# -- program-count bounds --------------------------------------------------
+
+def test_ladder_program_bounds():
+    """Climbing the ladder compiles at most len(ladder) update programs
+    (fixed round shape) and len(ladder) * |buckets| walk programs —
+    and re-serving after the climb adds none."""
+    V, C = 16, 4
+    src, dst, w = random_graph(V, C, max_bias=7, seed=2)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=3,
+                      capacity_ladder=(4, 8))
+    eng = DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg, PARAMS,
+                            walk_buckets=(8, 16))
+    rng = np.random.default_rng(5)
+
+    def serve():
+        for n in (5, 12, 3, 16):
+            eng.walk(rng.integers(0, V, n).astype(np.int32))
+        eng.ingest(jnp.ones(4, bool),
+                   jnp.asarray(rng.integers(0, V, 4), jnp.int32),
+                   jnp.asarray(rng.integers(0, V, 4), jnp.int32),
+                   jnp.full((4,), 2, jnp.int32))
+
+    serve()
+    eng.regrow()
+    serve()
+    serve()                                     # steady state: no growth
+    wc, uc = eng.walk_cache_size(), eng.update_cache_size()
+    assert wc != -1 and wc <= 2 * 2, \
+        f"{wc} walk programs for a 2-rung ladder x 2 buckets"
+    assert uc != -1 and uc <= 2, \
+        f"{uc} update programs for a 2-rung ladder at one round shape"
+
+
+# -- 8-shard mesh: lockstep + replay + chaos -------------------------------
+
+@multi
+def test_sharded_regrow_lockstep_matches_single_device():
+    """The mesh regrows in lockstep (the trigger is an all-reduce max
+    over the vertex-sharded deg) and the migrated sharded state + its
+    walks are bit-identical to the single-device regrow."""
+    mesh = jax.make_mesh((8,), ("data",))
+    V, C = 32, 8
+    src, dst, w = random_graph(V, C, max_bias=15, seed=8)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=4,
+                      capacity_ladder=(8, 16))
+
+    def mk(m):
+        return DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg,
+                                 PARAMS, seed=0, mesh=m,
+                                 backend="pallas")
+
+    e1, e8 = mk(None), mk(mesh)
+    assert e1.want_regrow(0.5) == e8.want_regrow(0.5)
+    assert e1.max_fill() == e8.max_fill()
+    e1.regrow()
+    e8.regrow()
+    assert e8.tier == 1 and e8.cfg.capacity == 16
+    _assert_trees_equal(jax.device_get(e1.state),
+                        jax.device_get(e8.state))
+    starts = jnp.arange(16, dtype=jnp.int32) % V
+    key = jax.random.key(9)
+    np.testing.assert_array_equal(np.asarray(e1.walk(starts, key=key)),
+                                  np.asarray(e8.walk(starts, key=key)))
+
+
+@multi
+@pytest.mark.parametrize("guard", [None, True],
+                         ids=["guard=off", "guard=on"])
+def test_scheduler_replay_regrow_8shards(guard):
+    """Live == replay with RegrowOps in the trace, vertex-sharded."""
+    mesh = jax.make_mesh((8,), ("data",))
+    cfg, src, dst, w = _hub_soak_cfg()
+
+    def mk():
+        return DynamicWalkEngine(from_edges(cfg, src, dst, w), cfg,
+                                 PARAMS, seed=7, guard=guard, mesh=mesh,
+                                 walk_buckets=(8,))
+
+    eng = mk()
+    sched = ServingScheduler(eng, SchedulerConfig(
+        update_lanes=4, max_update_delay=1, guard_drain_rounds=2,
+        regrow_watermark=0.9))
+    for ins, u, v, ww, starts in _hub_traffic(np.random.default_rng(1)):
+        assert sched.submit_update(ins, u, v, ww)
+        assert sched.submit_walk(starts) is not None
+        sched.tick()
+    done = {r.rid: r for r in sched.close()}
+    assert any(isinstance(op, RegrowOp) for op in sched.trace)
+    assert eng.tier >= 1
+
+    fresh = mk()
+    replayed = iter(replay_admission_trace(fresh, sched.trace))
+    for op in sched.trace:
+        if isinstance(op, WalkOp):
+            rep = next(replayed)
+            off = np.cumsum([0] + list(op.sizes))
+            for j, rid in enumerate(op.rids):
+                np.testing.assert_array_equal(
+                    done[rid].paths, rep[off[j]:off[j + 1]])
+    assert fresh.tier == eng.tier
+    _assert_trees_equal(jax.device_get(fresh.state),
+                        jax.device_get(eng.state))
+    if guard:
+        assert fresh.guard.snapshot() == eng.guard.snapshot()
+
+
+@multi
+def test_chaos_across_regrow():
+    """Recoverable transport faults stay bit-exact on BOTH sides of a
+    regrow boundary, and a killed transport still fails loudly."""
+    from repro.distributed.chaos import (ChaosSchedule,
+                                         RelayIntegrityError,
+                                         run_chaos_across_regrow)
+    from repro.kernels.ops import seed_from_key
+    V, C = 32, 16
+    src, dst, w = random_graph(V, C, max_bias=63, seed=3)
+    cfg = BingoConfig(num_vertices=V, capacity=C, bias_bits=6,
+                      base_log2=1, lam=4.0, capacity_ladder=(16, 32))
+    cfg2 = cfg.tier_config(1)
+    st = from_edges(cfg, src, dst, w)
+    params = WalkParams(kind="deepwalk", length=10)
+    walkers = jnp.arange(24, dtype=jnp.int32) % V
+    k0, k1 = jax.random.key(0), jax.random.key(1)
+    mesh = jax.make_mesh((8,), ("data",))
+    bk = get_backend("pallas")
+
+    sched = ChaosSchedule(seed=2, dup=0.2, delay=0.2)
+    p0, p1, r0, r1, grown = run_chaos_across_regrow(
+        bk, cfg, params, mesh, st, walkers,
+        (seed_from_key(k0), seed_from_key(k1)), sched, full_length=True)
+    assert r0.lost == 0 and r1.lost == 0
+    assert r0.duplicated + r1.duplicated > 0
+    single0 = walks.random_walk(st, cfg, walkers, k0, params,
+                                backend="pallas")
+    single1 = walks.random_walk(grown, cfg2, walkers, k1, params,
+                                backend="pallas")
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(single0))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(single1))
+    # faults across the boundary are detected, never papered over
+    with pytest.raises(RelayIntegrityError):
+        run_chaos_across_regrow(
+            bk, cfg, params, mesh, st, walkers,
+            (seed_from_key(k0), seed_from_key(k1)),
+            ChaosSchedule(seed=6, kill_round=1), max_rounds=12)
